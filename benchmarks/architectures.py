@@ -1,0 +1,73 @@
+"""Paper Fig. 6: MAD4PG/MADDPG across architectures on MPE tasks.
+
+Decentralised vs centralised critics on continuous-action spread, plus the
+speaker-listener sanity run (discrete, via MAPPO as the modern stand-in for
+the paper's feedforward actor-critic on that task).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.architectures import (
+    CentralisedQValueCritic,
+    DecentralisedPolicyActor,
+)
+from repro.core.system import train_anakin
+from repro.envs import SpeakerListener, Spread
+from repro.systems.maddpg import MaddpgConfig, make_mad4pg, make_maddpg
+
+CFG = MaddpgConfig()  # validated recipe: batch 512, critic_lr 3e-3 (see EXPERIMENTS.md)
+
+
+def bench(fast: bool = False):
+    iters = 800 if fast else 30_000
+    n_envs = 8
+    rows = []
+    env = Spread(num_agents=3, horizon=25, continuous=True)
+    runs = [
+        ("spread/maddpg_centralised", make_maddpg, None),
+        ("spread/mad4pg_centralised", make_mad4pg, None),
+        (
+            "spread/mad4pg_decentralised",
+            make_mad4pg,
+            DecentralisedPolicyActor(),
+        ),
+    ]
+    for name, maker, arch in runs:
+        system = maker(env, CFG, architecture=arch)
+        t0 = time.time()
+        st, metrics = train_anakin(system, jax.random.key(0), iters, n_envs)
+        jax.block_until_ready(st.train.params)
+        dt = time.time() - t0
+        r = np.asarray(metrics["reward"])
+        k = max(iters // 10, 1)
+        rows.append(
+            (
+                name,
+                dt / iters * 1e6,
+                f"reward_first10%={r[:k].mean():.3f} last10%={r[-k:].mean():.3f}",
+            )
+        )
+
+    # speaker-listener with MAPPO (asymmetric agents need per-agent nets)
+    from repro.systems.onpolicy import PPOConfig, make_mappo
+
+    sl = SpeakerListener()
+    ppo = make_mappo(sl, PPOConfig(rollout_len=64, shared_weights=False))
+    updates = 30 if fast else 400
+    t0 = time.time()
+    train, metrics = ppo["train"](jax.random.key(0), updates, 16)
+    dt = time.time() - t0
+    r = np.asarray(metrics["reward"])
+    k = max(updates // 10, 1)
+    rows.append(
+        (
+            "speaker_listener/mappo",
+            dt / updates * 1e6,
+            f"reward_first10%={r[:k].mean():.3f} last10%={r[-k:].mean():.3f}",
+        )
+    )
+    return rows

@@ -1,0 +1,70 @@
+"""Paper Fig. 6 (bottom right): time-to-reward vs number of executors.
+
+The paper scales Launchpad executor processes; here the executors are
+devices on the mesh data axis (shard_map). On this container the devices
+are host-platform CPU slices, so wall-clock does not improve — the claim
+probed is *system* scaling: reward-per-env-step parity while total
+throughput (env-steps/sec summed over executors) rises with executor count.
+Runs in a subprocess because jax fixes the device count at first init.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_CODE = """
+import time, jax, numpy as np
+from repro.envs import Spread
+from repro.systems.madqn import make_madqn
+from repro.systems.offpolicy import OffPolicyConfig
+from repro.core.system import train_distributed, train_anakin
+
+iters = {iters}
+for n_exec in (1, 2, 4):
+    env = Spread(num_agents=3, horizon=25)
+    cfg = OffPolicyConfig(buffer_capacity=20000, min_replay=500, batch_size=64,
+                          eps_decay_steps=10000,
+                          distributed_axis="data" if n_exec > 1 else None)
+    system = make_madqn(env, cfg)
+    key = jax.random.key(0)
+    t0 = time.time()
+    if n_exec == 1:
+        st, metrics = train_anakin(system, key, iters, 8)
+        jax.block_until_ready(st.train.params)
+        r = float(np.asarray(metrics["reward"])[-iters//10:].mean())
+    else:
+        mesh = jax.make_mesh((n_exec,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        params, metrics = train_distributed(system, key, iters, 8, mesh)
+        r = float(np.asarray(metrics["reward"]).mean())
+    dt = time.time() - t0
+    steps = iters * 8 * n_exec
+    print(f"ROW,distribution/num_executors_{{n_exec}},{{dt/iters*1e6:.1f}},"
+          f"reward={{r:.3f}} total_env_steps/s={{steps/dt:.0f}} wall={{dt:.1f}}s")
+"""
+
+
+def bench(fast: bool = False):
+    iters = 400 if fast else 4_000
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_CODE.format(iters=iters))],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=3000,
+    )
+    rows = []
+    for line in r.stdout.splitlines():
+        if line.startswith("ROW,"):
+            _, name, us, derived = line.split(",", 3)
+            rows.append((name, float(us), derived))
+    if not rows:
+        rows.append(("distribution/FAILED", 0.0, (r.stderr or r.stdout)[-200:]))
+    return rows

@@ -1,0 +1,159 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: run the three chosen (arch, shape) pairs through
+their hypothesis->change->measure sequences and dump a JSON log.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb [--pair A|B|C] [--json out]
+
+Pairs (chosen from the 40-pair baseline table):
+  A llama3-405b/train_4k    worst roofline fraction (787 GiB/dev — does not fit)
+  B olmoe-1b-7b/train_4k    most collective-bound (24% of step time)
+  C zamba2-2.7b/prefill_32k worst useful-FLOPs ratio (0.14)
+"""
+
+import argparse
+import json
+import sys
+
+from repro.launch.dryrun import dryrun_pair
+
+EXPERIMENTS = {
+    "A": [
+        ("llama3-405b", "train_4k", "A0-baseline", {}),
+        ("llama3-405b", "train_4k", "A1-grad_accum8", {"grad_accum": 8}),
+        (
+            "llama3-405b",
+            "train_4k",
+            "A2-ga16+seqshard",
+            {"grad_accum": 16, "sharding": "fsdp_tp_sp"},
+        ),
+        (
+            "llama3-405b",
+            "train_4k",
+            "A3-ga16+sp+xent256",
+            {"grad_accum": 16, "sharding": "fsdp_tp_sp", "xent_chunk": 256},
+        ),
+        (
+            "llama3-405b",
+            "train_4k",
+            "A4-ga32+sp+causal_skip",
+            {
+                "grad_accum": 32,
+                "sharding": "fsdp_tp_sp",
+                "attn_causal_skip": True,
+            },
+        ),
+    ],
+    "B": [
+        ("olmoe-1b-7b", "train_4k", "B0-baseline", {}),
+        ("olmoe-1b-7b", "train_4k", "B1-save_layer_outputs", {"save_layer_outputs": True}),
+        (
+            "olmoe-1b-7b",
+            "train_4k",
+            "B2-slo+group256",
+            {"save_layer_outputs": True, "moe_group_size": 256},
+        ),
+        (
+            "olmoe-1b-7b",
+            "train_4k",
+            "B3-slo+group256+causal_skip",
+            {
+                "save_layer_outputs": True,
+                "moe_group_size": 256,
+                "attn_causal_skip": True,
+            },
+        ),
+    ],
+    "C": [
+        ("zamba2-2.7b", "prefill_32k", "C0-baseline", {}),
+        ("zamba2-2.7b", "prefill_32k", "C1-ssm_chunk64", {"ssm_chunk": 64}),
+        (
+            "zamba2-2.7b",
+            "prefill_32k",
+            "C2-chunk64+causal_skip",
+            {"ssm_chunk": 64, "attn_causal_skip": True},
+        ),
+        (
+            "zamba2-2.7b",
+            "prefill_32k",
+            "C3-chunk32+causal_skip",
+            {"ssm_chunk": 32, "attn_causal_skip": True},
+        ),
+    ],
+}
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--pair", default=None)
+    p.add_argument("--json", default="results/hillclimb.json")
+    args = p.parse_args()
+
+    pairs = [args.pair] if args.pair else ["A", "B", "C"]
+    for pid in pairs:
+        if pid not in EXPERIMENTS:
+            p.error(f"unknown pair {pid}")
+    records = []
+    for pid in pairs:
+        for arch, shape, label, overrides in EXPERIMENTS[pid]:
+            try:
+                rec = dryrun_pair(arch, shape, verbose=False, overrides=overrides)
+            except Exception as e:  # noqa: BLE001
+                print(f"[FAIL] {label}: {type(e).__name__}: {str(e)[:200]}")
+                sys.stdout.flush()
+                continue
+            rec["label"] = label
+            rec["overrides"] = overrides
+            records.append(rec)
+            r = rec["roofline"]
+            print(
+                f"[{label:28s}] peak/dev={rec['bytes_per_device']['peak_est']/2**30:8.2f}GiB "
+                f"compute={r['compute_s']*1e3:9.2f}ms memory={r['memory_s']*1e3:10.2f}ms "
+                f"coll={r['collective_s']*1e3:8.2f}ms useful={r['useful_ratio']:.3f} "
+                f"(compile {rec['compile_s']}s)"
+            )
+            sys.stdout.flush()
+    os.makedirs(os.path.dirname(args.json), exist_ok=True)
+    with open(args.json, "w") as f:
+        json.dump(records, f, indent=1)
+
+
+# Round-2 experiments appended after analysing round 1 (see EXPERIMENTS.md):
+EXPERIMENTS["A2"] = [
+    ("llama3-405b", "train_4k", "A5-ga32+sp", {"grad_accum": 32, "sharding": "fsdp_tp_sp"}),
+]
+EXPERIMENTS["C2"] = [
+    # code change between rounds: chunk-local fp32 casting + bf16 conv in the
+    # SSM paths (ssm.py) — C4 is the new "baseline-config" measurement.
+    ("zamba2-2.7b", "prefill_32k", "C4-chunklocal-cast", {}),
+    ("zamba2-2.7b", "prefill_32k", "C5-cast+chunk256", {"ssm_chunk": 256}),
+    ("falcon-mamba-7b", "train_4k", "C6-falcon-cast-check", {}),
+]
+
+
+EXPERIMENTS["A3"] = [
+    ("llama3-405b", "train_4k", "A6-ga8+sp", {"grad_accum": 8, "sharding": "fsdp_tp_sp"}),
+    ("llama3-405b", "train_4k", "A7-ga4+sp", {"grad_accum": 4, "sharding": "fsdp_tp_sp"}),
+]
+
+EXPERIMENTS["A4"] = [
+    ("llama3-405b", "train_4k", "A8-ga2+sp", {"grad_accum": 2, "sharding": "fsdp_tp_sp"}),
+    ("llama3-405b", "train_4k", "A9-ga1+sp", {"grad_accum": 1, "sharding": "fsdp_tp_sp"}),
+]
+
+
+EXPERIMENTS["D"] = [
+    # Pair D (round 3): decode_32k KV caches exceed HBM when n_kv < model
+    # axis (kv heads unshardable). Flash-decoding-style cache sharding:
+    # shard the cache seq dim over "model"; softmax combines via small ARs.
+    ("llama3-405b", "decode_32k", "D0-baseline", {}),
+    ("llama3-405b", "decode_32k", "D1-shard_kv_seq", {"shard_kv_seq": True}),
+    ("minitron-8b", "decode_32k", "D2-minitron-baseline", {}),
+    ("minitron-8b", "decode_32k", "D3-minitron-kv_seq", {"shard_kv_seq": True}),
+]
+
+
+if __name__ == "__main__":
+    main()

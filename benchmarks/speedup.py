@@ -1,0 +1,72 @@
+"""JAX-rewrite speedup claim (10-100x): env-steps/sec across execution modes.
+
+Three rungs of the same MADQN system on the same environment:
+  acme-style   — the paper's Block-1 python loop (one env step + one update
+                 per python iteration; jitted fns, python-paced control flow)
+  anakin-jit   — whole loop fused into one lax.scan under jit, 1 env
+  anakin-vmap  — fused + vmap over N parallel envs
+
+Reported: environment steps per second and speedup over the python loop.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.system import (
+    init_system_state,
+    run_environment_loop,
+    train_anakin,
+)
+from repro.envs import Spread
+from repro.systems.madqn import make_madqn
+from repro.systems.offpolicy import OffPolicyConfig
+
+CFG = OffPolicyConfig(
+    buffer_capacity=10_000, min_replay=200, batch_size=32, eps_decay_steps=5_000
+)
+
+
+def bench(fast: bool = False):
+    env = Spread(num_agents=3, horizon=25)
+    system = make_madqn(env, CFG)
+    key = jax.random.key(0)
+    rows = []
+
+    # --- faithful python loop (paper Block 1)
+    n_eps = 3 if fast else 10
+    t0 = time.time()
+    run_environment_loop(system, key, num_episodes=n_eps)
+    dt = time.time() - t0
+    steps_loop = n_eps * env.horizon
+    sps_loop = steps_loop / dt
+    rows.append(("speedup/acme_python_loop", dt / steps_loop * 1e6, f"{sps_loop:.0f} steps/s"))
+
+    # --- anakin, 1 env
+    iters = 300 if fast else 2_000
+    train_anakin(system, key, 10, 1)  # warm compile
+    t0 = time.time()
+    st, _ = train_anakin(system, key, iters, 1)
+    jax.block_until_ready(st.train.params)
+    dt = time.time() - t0
+    sps_1 = iters / dt
+    rows.append(
+        ("speedup/anakin_jit_1env", dt / iters * 1e6,
+         f"{sps_1:.0f} steps/s = {sps_1 / sps_loop:.1f}x python loop")
+    )
+
+    # --- anakin, vmapped envs
+    for n_envs in (16, 64):
+        train_anakin(system, key, 5, n_envs)
+        t0 = time.time()
+        st, _ = train_anakin(system, key, iters, n_envs)
+        jax.block_until_ready(st.train.params)
+        dt = time.time() - t0
+        sps = iters * n_envs / dt
+        rows.append(
+            (f"speedup/anakin_vmap_{n_envs}env", dt / iters * 1e6,
+             f"{sps:.0f} steps/s = {sps / sps_loop:.1f}x python loop")
+        )
+    return rows

@@ -1,0 +1,59 @@
+"""Serve a small model with batched requests (deliverable-b serving driver).
+
+Continuous batching: 8 requests with ragged prompt lengths stream through a
+2-slot engine; slots are refilled as requests finish. Output parity with
+sequential generation is asserted for one request.
+
+  PYTHONPATH=src python examples/continuous_batching.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.serving.engine import Request, ServingEngine
+
+cfg = get_smoke_config("internlm2-1.8b")
+params = M.init_model(jax.random.key(0), cfg)
+rng = np.random.default_rng(0)
+
+engine = ServingEngine(cfg, params, max_slots=2, prompt_capacity=24, max_new_tokens=8)
+prompts = [
+    rng.integers(0, cfg.vocab, (int(L),)).astype(np.int32)
+    for L in rng.integers(6, 20, size=8)
+]
+for i, p in enumerate(prompts):
+    engine.submit(Request(uid=i, prompt=p, max_new_tokens=8))
+
+t0 = time.time()
+finished = engine.run_until_drained()
+dt = time.time() - t0
+total_tokens = sum(len(r.output) for r in finished)
+print(f"served {len(finished)} requests / {total_tokens} tokens "
+      f"in {dt:.1f}s on 2 slots")
+for r in sorted(finished, key=lambda r: r.uid)[:4]:
+    print(f"  req {r.uid} (prompt {len(r.prompt):2d} toks) -> {r.output}")
+
+# parity with a sequential single-stream run
+import jax.numpy as jnp
+
+
+def sequential_generate(cfg, params, prompt, n):
+    batch = {"tokens": jnp.asarray(prompt[None, :], jnp.int32)}
+    logits, cache = jax.jit(
+        lambda p, b: M.prefill(p, b, cfg, max_len=len(prompt) + n + 4)
+    )(params, batch)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    step = jax.jit(lambda p, c, t: M.decode_step(p, c, t, cfg))
+    for _ in range(n - 1):
+        logits, cache = step(params, cache, jnp.asarray([[out[-1]]], jnp.int32))
+        out.append(int(jnp.argmax(logits[0, 0])))
+    return out
+
+
+ref = sequential_generate(cfg, params, prompts[0], 8)
+got = next(r.output for r in finished if r.uid == 0)
+assert got == ref, (got, ref)
+print("parity with sequential generation: OK")

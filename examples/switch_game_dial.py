@@ -1,0 +1,30 @@
+"""Paper Fig. 4 (top): DIAL communication on the switch riddle.
+
+Trains recurrent Q-agents with the differentiable channel, then the
+no-communication ablation, and prints the evaluation returns (hard channel,
+decentralised execution).
+
+  PYTHONPATH=src python examples/switch_game_dial.py [--updates 800]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.envs import SwitchGame
+from repro.systems.dial import DialConfig, train_dial
+
+p = argparse.ArgumentParser()
+p.add_argument("--updates", type=int, default=800)
+p.add_argument("--agents", type=int, default=3)
+args = p.parse_args()
+
+env = SwitchGame(num_agents=args.agents)
+for use_comm in (True, False):
+    name = "DIAL (learned channel)" if use_comm else "no communication"
+    cfg = DialConfig(use_comm=use_comm, batch_episodes=32)
+    train, metrics, system = train_dial(env, cfg, jax.random.key(0), args.updates)
+    r = np.asarray(metrics["return"])
+    ev = float(system["evaluate"](train, jax.random.key(99), batch=256))
+    print(f"{name:24s} train_return(last 50): {r[-50:].mean():+.3f}   "
+          f"eval_return (hard bits): {ev:+.3f}")

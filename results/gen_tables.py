@@ -1,0 +1,23 @@
+import json, sys
+
+def table(path, out):
+    recs = json.load(open(path))
+    lines = []
+    lines.append("| arch | shape | mesh | peak GiB/dev | HLO GFLOPs/dev | HLO GB/dev | coll GB/dev | compute ms | memory ms | coll ms | dominant | useful |")
+    lines.append("|---|---|---|---:|---:|---:|---:|---:|---:|---:|---|---:|")
+    for r in recs:
+        rr = r["roofline"]
+        coll = sum(rr["collectives_per_device"].values())
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['bytes_per_device']['peak_est']/2**30:.2f} "
+            f"| {rr['hlo_flops_global']/r['chips']/1e9:.1f} "
+            f"| {rr['hlo_bytes_global']/r['chips']/1e9:.1f} "
+            f"| {coll/1e9:.2f} "
+            f"| {rr['compute_s']*1e3:.2f} | {rr['memory_s']*1e3:.2f} | {rr['collective_s']*1e3:.2f} "
+            f"| {rr['dominant']} | {rr['useful_ratio']:.2f} |")
+    open(out, "w").write("\n".join(lines))
+    print(out, len(recs), "rows")
+
+if __name__ == "__main__":
+    table(sys.argv[1], sys.argv[2])

@@ -1,0 +1,87 @@
+"""Sharding-aware pytree checkpointing to .npz (no orbax offline).
+
+Pytrees are flattened with '/'-joined key paths. Sharded jax.Arrays are
+gathered to host before saving (fine single-process; a multi-host version
+would save per-process shards — noted in DESIGN.md). Restore returns numpy
+leaves reassembled into the original structure; the caller device_puts them
+with the target shardings.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def jnp_cast(val, dtype):
+    import jax.numpy as jnp
+
+    return jnp.asarray(val).astype(dtype)
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(_path_str(p) for p in path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.name == "bfloat16":  # npz/numpy can't cast bf16; widen
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out, treedef
+
+
+def _path_str(entry) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return str(entry.idx)
+    if hasattr(entry, "name"):
+        return str(entry.name)
+    return str(entry)
+
+
+def save_checkpoint(directory: str, step: int, tree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat, _ = _flatten_with_paths(tree)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    tmp = path + ".tmp.npz"  # np.savez appends .npz unless present
+    np.savez(tmp, **flat)
+    os.replace(tmp, path)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        m = re.match(r"ckpt_(\d+)\.npz$", name)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, target_tree):
+    """Restore into the structure of `target_tree` (values replaced)."""
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+    leaves = []
+    for p, leaf in flat:
+        key = _SEP.join(_path_str(e) for e in p)
+        if key not in data:
+            raise KeyError(f"checkpoint missing key {key!r}")
+        val = data[key]
+        if hasattr(leaf, "dtype") and val.dtype != leaf.dtype:
+            # cast through jnp (numpy has no bf16 cast kernel)
+            val = np.asarray(jax.device_get(jnp_cast(val, leaf.dtype)))
+        leaves.append(val)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(target_tree), leaves
+    )

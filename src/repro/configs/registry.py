@@ -1,0 +1,36 @@
+"""Architecture registry: --arch <id> resolution."""
+from __future__ import annotations
+
+import importlib
+from typing import Tuple
+
+ARCH_IDS: Tuple[str, ...] = (
+    "minitron-8b",
+    "llava-next-mistral-7b",
+    "internlm2-1.8b",
+    "olmoe-1b-7b",
+    "kimi-k2-1t-a32b",
+    "granite-8b",
+    "falcon-mamba-7b",
+    "zamba2-2.7b",
+    "musicgen-large",
+    "llama3-405b",
+)
+
+
+def _module(arch_id: str):
+    name = arch_id.replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(arch_id: str):
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return _module(arch_id).CONFIG
+
+
+def get_smoke_config(arch_id: str):
+    """Reduced same-family variant for CPU smoke tests."""
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return _module(arch_id).SMOKE

@@ -1,0 +1,23 @@
+from repro.core.system import (
+    System,
+    run_environment_loop,
+    train_anakin,
+    train_distributed,
+    init_system_state,
+)
+from repro.core.types import Transition, TrainState, SystemState
+from repro.core import architectures, buffer, modules
+
+__all__ = [
+    "System",
+    "run_environment_loop",
+    "train_anakin",
+    "train_distributed",
+    "init_system_state",
+    "Transition",
+    "TrainState",
+    "SystemState",
+    "architectures",
+    "buffer",
+    "modules",
+]

@@ -1,0 +1,77 @@
+"""System architectures: the information-flow layer of a Mava system.
+
+An architecture decides what each agent's policy and critic may condition
+on (paper Fig. 3):
+
+  Decentralised — policy_i(o_i);    critic_i(o_i, a_i)
+  Centralised   — policy_i(o_i);    critic_i(global_state, a_1..a_N)
+  Networked     — policy_i(o_i);    critic_i(o_i ∪ o_j, a_j for j in N(i))
+
+Architectures are pure input-builders, so wrapping modules (communication,
+fingerprints) compose by transforming the returned arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence
+
+import jax.numpy as jnp
+
+
+def one_hot_actions(actions: Dict[str, jnp.ndarray], num_actions: Dict[str, int]):
+    import jax.nn
+
+    return {
+        a: jax.nn.one_hot(actions[a], num_actions[a]) for a in actions
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class DecentralisedPolicyActor:
+    """Fully independent agents (paper Fig. 3 left)."""
+
+    def policy_input(self, obs, agent):
+        return obs[agent]
+
+    def critic_input(self, obs, actions_oh, global_state, agent):
+        return jnp.concatenate([obs[agent], actions_oh[agent]], axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class CentralisedQValueCritic:
+    """CTDE: critics see the global state and all agents' actions."""
+
+    agent_order: Sequence[str] = ()
+
+    def policy_input(self, obs, agent):
+        return obs[agent]
+
+    def critic_input(self, obs, actions_oh, global_state, agent):
+        order = self.agent_order or sorted(obs.keys())
+        all_acts = jnp.concatenate([actions_oh[a] for a in order], axis=-1)
+        return jnp.concatenate([global_state, all_acts], axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkedQValueCritic:
+    """Information topology: critic_i sees its graph neighbourhood only.
+
+    adjacency[i][j] = 1 when agent j's obs/action flow into agent i's critic
+    (the diagonal should be 1). Row order follows agent_order.
+    """
+
+    adjacency: tuple  # tuple of tuples of 0/1
+    agent_order: Sequence[str] = ()
+
+    def policy_input(self, obs, agent):
+        return obs[agent]
+
+    def critic_input(self, obs, actions_oh, global_state, agent):
+        order = list(self.agent_order or sorted(obs.keys()))
+        i = order.index(agent)
+        feats = []
+        for j, other in enumerate(order):
+            m = float(self.adjacency[i][j])
+            feats.append(obs[other] * m)
+            feats.append(actions_oh[other] * m)
+        return jnp.concatenate(feats, axis=-1)

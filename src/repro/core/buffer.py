@@ -1,0 +1,60 @@
+"""On-device replay tables — the Reverb replacement (see DESIGN.md §3).
+
+Fixed-capacity circular storage as a pytree of arrays with a functional
+add/sample API, so the whole table lives in the training jit. Supports the
+FIFO overwrite discipline of a bounded Reverb table and uniform sampling;
+a trajectory variant stores fixed-length sequences for recurrent systems
+(R2D2-style MADQN, DIAL).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class BufferState(NamedTuple):
+    storage: Any          # pytree, leaves (capacity, ...)
+    insert_pos: jnp.ndarray
+    size: jnp.ndarray
+
+
+def buffer_init(example_item, capacity: int) -> BufferState:
+    """example_item: a pytree with the per-item shapes (no leading dim)."""
+    storage = jax.tree_util.tree_map(
+        lambda x: jnp.zeros((capacity,) + jnp.shape(x), jnp.asarray(x).dtype),
+        example_item,
+    )
+    return BufferState(
+        storage=storage,
+        insert_pos=jnp.zeros((), jnp.int32),
+        size=jnp.zeros((), jnp.int32),
+    )
+
+
+def buffer_add(state: BufferState, items) -> BufferState:
+    """Add a batch of items (leading dim B), overwriting FIFO on overflow."""
+    leaves = jax.tree_util.tree_leaves(items)
+    B = leaves[0].shape[0]
+    capacity = jax.tree_util.tree_leaves(state.storage)[0].shape[0]
+    idx = (state.insert_pos + jnp.arange(B)) % capacity
+    storage = jax.tree_util.tree_map(
+        lambda s, x: s.at[idx].set(x.astype(s.dtype)), state.storage, items
+    )
+    return BufferState(
+        storage=storage,
+        insert_pos=(state.insert_pos + B) % capacity,
+        size=jnp.minimum(state.size + B, capacity),
+    )
+
+
+def buffer_sample(state: BufferState, key, batch_size: int):
+    """Uniform sample with replacement over the filled region."""
+    maxval = jnp.maximum(state.size, 1)
+    idx = jax.random.randint(key, (batch_size,), 0, maxval)
+    return jax.tree_util.tree_map(lambda s: s[idx], state.storage)
+
+
+def buffer_can_sample(state: BufferState, min_size: int):
+    return state.size >= min_size

@@ -1,0 +1,11 @@
+from repro.core.modules.mixing import AdditiveMixing, MonotonicMixing
+from repro.core.modules.communication import BroadcastedCommunication, dru
+from repro.core.modules.stabilisation import FingerPrintStabilisation
+
+__all__ = [
+    "AdditiveMixing",
+    "MonotonicMixing",
+    "BroadcastedCommunication",
+    "dru",
+    "FingerPrintStabilisation",
+]

@@ -1,0 +1,57 @@
+"""Learned-communication modules (DIAL).
+
+The Discretise/Regularise Unit (DRU) from Foerster et al. 2016: during
+(centralised) training the channel is continuous — sigmoid(m + noise) — so
+gradients flow between agents through the channel; during decentralised
+execution the message is hard-thresholded to a bit. BroadcastedCommunication
+routes each agent's outgoing message to all other agents (mean-pooled),
+optionally with a shared channel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def dru(message, key, noise_std: float, training: bool):
+    """Discretise/Regularise Unit."""
+    if training:
+        noise = jax.random.normal(key, message.shape) * noise_std
+        return jax.nn.sigmoid(message + noise)
+    return (message > 0).astype(jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class BroadcastedCommunication:
+    channel_size: int = 1
+    noise_std: float = 0.5
+    shared: bool = True  # one shared channel: messages are mean-pooled
+
+    def route(self, messages: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+        """messages: per-agent outgoing (..., C) -> per-agent incoming."""
+        ids = sorted(messages.keys())
+        stack = jnp.stack([messages[a] for a in ids], axis=0)  # (N, ..., C)
+        N = len(ids)
+        if self.shared:
+            total = jnp.sum(stack, axis=0, keepdims=True)
+            incoming = (total - stack) / max(N - 1, 1)
+        else:
+            # each agent hears the concat of all other agents' channels
+            incoming = jnp.stack(
+                [
+                    jnp.concatenate(
+                        [stack[j] for j in range(N) if j != i], axis=-1
+                    )
+                    for i in range(N)
+                ],
+                axis=0,
+            )
+        return {a: incoming[i] for i, a in enumerate(ids)}
+
+    def incoming_size(self, num_agents: int) -> int:
+        return self.channel_size if self.shared else self.channel_size * (
+            num_agents - 1
+        )

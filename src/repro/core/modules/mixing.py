@@ -1,0 +1,68 @@
+"""Value-decomposition mixing modules (VDN / QMIX).
+
+A mixing module maps per-agent chosen Q-values (and the global state) to a
+joint Q_tot used in the TD loss. AdditiveMixing is VDN's sum; MonotonicMixing
+is QMIX's state-conditioned hypernetwork with non-negative mixing weights
+(which guarantees ∂Q_tot/∂Q_i ≥ 0 — property-tested in
+tests/test_mixing.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import initializers
+
+
+@dataclasses.dataclass(frozen=True)
+class AdditiveMixing:
+    """VDN: Q_tot = sum_i Q_i. Stateless."""
+
+    def init(self, key, num_agents: int, state_dim: int):
+        del key, num_agents, state_dim
+        return {}
+
+    def apply(self, params, agent_qs, state):
+        """agent_qs: (..., N); state: (..., S) unused -> (...,)."""
+        del params, state
+        return jnp.sum(agent_qs, axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class MonotonicMixing:
+    """QMIX: Q_tot = w2(s)^T elu(w1(s)^T q + b1(s)) + b2(s), w1,w2 >= 0."""
+
+    embed_dim: int = 32
+    hypernet_hidden: int = 64
+
+    def init(self, key, num_agents: int, state_dim: int):
+        k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+        lecun = initializers.lecun_normal()
+        E, H = self.embed_dim, self.hypernet_hidden
+        return {
+            "hyper_w1": lecun(k1, (state_dim, num_agents * E)),
+            "hyper_b1": jnp.zeros((state_dim, E)),
+            "hyper_w2": lecun(k2, (state_dim, E)),
+            # b2 is a 2-layer hypernetwork (as in the QMIX paper)
+            "hyper_b2_1": lecun(k3, (state_dim, H)),
+            "hyper_b2_1b": jnp.zeros((H,)),
+            "hyper_b2_2": lecun(k4, (H, 1)),
+        }
+
+    def apply(self, params, agent_qs, state):
+        """agent_qs: (..., N); state: (..., S) -> (...,)."""
+        N = agent_qs.shape[-1]
+        E = self.embed_dim
+        w1 = jnp.abs(state @ params["hyper_w1"]).reshape(*state.shape[:-1], N, E)
+        b1 = state @ params["hyper_b1"]
+        hidden = jax.nn.elu(
+            jnp.einsum("...n,...ne->...e", agent_qs, w1) + b1
+        )
+        w2 = jnp.abs(state @ params["hyper_w2"])
+        b2 = (
+            jax.nn.relu(state @ params["hyper_b2_1"] + params["hyper_b2_1b"])
+            @ params["hyper_b2_2"]
+        )[..., 0]
+        return jnp.sum(hidden * w2, axis=-1) + b2

@@ -1,0 +1,36 @@
+"""Replay stabilisation via policy fingerprints (Foerster et al. 2017c).
+
+Independent-learner replay is non-stationary: old transitions were generated
+under other agents' older policies. The fingerprint disambiguates them by
+appending a low-dimensional signature of the joint policy — here (epsilon,
+trainer_step) — to each observation, both when acting and when training.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FingerPrintStabilisation:
+    step_scale: float = 1e-4  # trainer steps are O(1e4)
+
+    @property
+    def size(self) -> int:
+        return 2
+
+    def augment(self, obs: Dict[str, jnp.ndarray], eps, step):
+        """Append [eps, step*scale] to every agent's observation."""
+        def aug(o):
+            fp = jnp.stack(
+                [
+                    jnp.broadcast_to(eps, o.shape[:-1]),
+                    jnp.broadcast_to(step * self.step_scale, o.shape[:-1]),
+                ],
+                axis=-1,
+            ).astype(o.dtype)
+            return jnp.concatenate([o, fp], axis=-1)
+
+        return {a: aug(o) for a, o in obs.items()}

@@ -1,0 +1,37 @@
+"""Core MARL types (executor/trainer currency)."""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+
+class Transition(NamedTuple):
+    """One multi-agent environment transition (the replay-table row)."""
+
+    obs: Dict[str, Any]        # per-agent observation at t
+    actions: Dict[str, Any]    # per-agent action taken at t
+    rewards: Dict[str, Any]    # per-agent reward from the step
+    discount: Any              # shared discount (0 on terminal)
+    next_obs: Dict[str, Any]   # per-agent observation at t+1
+    state: Any                 # global state at t (centralised training)
+    next_state: Any            # global state at t+1
+    extras: Dict[str, Any] = {}
+
+
+class TrainState(NamedTuple):
+    """Parameters + optimizer state + bookkeeping for a trainer."""
+
+    params: Any
+    target_params: Any
+    opt_state: Any
+    steps: Any
+
+
+class SystemState(NamedTuple):
+    """Everything a running system owns (executor + trainer + dataset)."""
+
+    train: TrainState
+    buffer: Any
+    env_state: Any
+    timestep: Any
+    carry: Any       # recurrent hidden / comm messages, per env
+    key: Any

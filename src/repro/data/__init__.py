@@ -1,0 +1,4 @@
+from repro.data.tokens import SyntheticTokenDataset, make_lm_batch
+from repro.data.trajectory import batch_trajectories
+
+__all__ = ["SyntheticTokenDataset", "make_lm_batch", "batch_trajectories"]

@@ -1,0 +1,25 @@
+"""Utilities for batching MARL trajectories (host-side analysis only).
+
+On-device trajectory storage lives in repro.core.buffer; these helpers are
+for converting rollouts to numpy for plotting / evaluation summaries.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def batch_trajectories(trajs):
+    """Stack a list of trajectory pytrees along a leading axis (numpy)."""
+    return jax.tree_util.tree_map(lambda *xs: np.stack(xs, axis=0), *trajs)
+
+
+def episode_returns(rewards: np.ndarray, dones: np.ndarray) -> np.ndarray:
+    """Split a flat (T,) reward stream into per-episode returns using dones."""
+    returns, acc = [], 0.0
+    for r, d in zip(rewards, dones):
+        acc += float(r)
+        if d:
+            returns.append(acc)
+            acc = 0.0
+    return np.asarray(returns)

@@ -1,0 +1,13 @@
+from repro.distributed.sharding import (
+    DEFAULT_RULES,
+    logical_to_spec,
+    tree_shardings,
+    with_logical_constraint,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "logical_to_spec",
+    "tree_shardings",
+    "with_logical_constraint",
+]

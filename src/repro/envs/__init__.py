@@ -1,0 +1,28 @@
+from repro.envs.api import TimeStep, EnvSpec, ArraySpec, DiscreteSpec, StepType
+from repro.envs.matrix_game import MatrixGame
+from repro.envs.switch_game import SwitchGame
+from repro.envs.spread import Spread
+from repro.envs.speaker_listener import SpeakerListener
+from repro.envs.smax_lite import SmaxLite
+
+REGISTRY = {
+    "matrix_game": MatrixGame,
+    "switch_game": SwitchGame,
+    "spread": Spread,
+    "speaker_listener": SpeakerListener,
+    "smax_lite": SmaxLite,
+}
+
+__all__ = [
+    "TimeStep",
+    "EnvSpec",
+    "ArraySpec",
+    "DiscreteSpec",
+    "StepType",
+    "MatrixGame",
+    "SwitchGame",
+    "Spread",
+    "SpeakerListener",
+    "SmaxLite",
+    "REGISTRY",
+]

@@ -1,0 +1,77 @@
+"""Multi-agent environment API (dm_env-style, pure functional for JAX).
+
+Mirrors the paper's multi-agent TimeStep/specs: observations and rewards are
+dicts keyed by agent id; discount and step_type are shared. Environments are
+dataclasses of pure functions:
+
+    state, ts = env.reset(key)
+    state, ts = env.step(state, actions)     # actions: dict agent -> int
+
+so a whole env is vmap-able across parallel copies and scannable across time
+— the property that lets Mava-JAX fuse env stepping into the training jit
+(the Anakin architecture) instead of paying a python/gRPC round trip per
+step as in the Acme/Reverb original.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+
+class StepType:
+    FIRST = 0
+    MID = 1
+    LAST = 2
+
+
+class TimeStep(NamedTuple):
+    step_type: jnp.ndarray            # () int32
+    reward: Dict[str, jnp.ndarray]    # per-agent scalar
+    discount: jnp.ndarray             # () shared
+    observation: Dict[str, jnp.ndarray]
+
+    def first(self):
+        return self.step_type == StepType.FIRST
+
+    def last(self):
+        return self.step_type == StepType.LAST
+
+
+@dataclasses.dataclass(frozen=True)
+class ArraySpec:
+    shape: Tuple[int, ...]
+    dtype: Any = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class DiscreteSpec:
+    num_values: int
+    dtype: Any = jnp.int32
+
+    @property
+    def shape(self):
+        return ()
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvSpec:
+    """Multi-agent spec: per-agent observation/action specs + global state."""
+
+    agent_ids: Tuple[str, ...]
+    observations: Dict[str, ArraySpec]
+    actions: Dict[str, Any]  # DiscreteSpec or ArraySpec (continuous)
+    state: ArraySpec  # global state (for centralised critics / QMIX)
+
+    @property
+    def num_agents(self) -> int:
+        return len(self.agent_ids)
+
+
+def agent_ids(n: int) -> Tuple[str, ...]:
+    return tuple(f"agent_{i}" for i in range(n))
+
+
+def shared_reward(ids, value) -> Dict[str, jnp.ndarray]:
+    return {a: value for a in ids}

@@ -1,0 +1,107 @@
+"""Iterated cooperative matrix games (climbing / penalty).
+
+Classic 2-agent coordination testbeds: both agents pick one of K actions;
+the shared reward is payoff[a0, a1]. Observations are the one-hot of the
+previous joint action (zeros on the first step), so recurrent or
+feed-forward policies can both be probed. An episode is `horizon` steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.api import (
+    ArraySpec,
+    DiscreteSpec,
+    EnvSpec,
+    StepType,
+    TimeStep,
+    agent_ids,
+    shared_reward,
+)
+
+CLIMBING = jnp.array(
+    [[11.0, -30.0, 0.0], [-30.0, 7.0, 6.0], [0.0, 0.0, 5.0]]
+)
+PENALTY = jnp.array(
+    [[10.0, 0.0, -10.0], [0.0, 2.0, 0.0], [-10.0, 0.0, 10.0]]
+)
+
+
+class MatrixGameState(NamedTuple):
+    t: jnp.ndarray
+    last_joint: jnp.ndarray  # (2,) int32
+
+
+@dataclasses.dataclass(frozen=True)
+class MatrixGame:
+    payoff: jnp.ndarray = None  # (K,K)
+    horizon: int = 10
+
+    def __post_init__(self):
+        if self.payoff is None:
+            object.__setattr__(self, "payoff", CLIMBING)
+
+    @property
+    def num_agents(self):
+        return 2
+
+    @property
+    def agent_ids(self):
+        return agent_ids(2)
+
+    @property
+    def num_actions(self):
+        return self.payoff.shape[0]
+
+    def spec(self) -> EnvSpec:
+        K = self.num_actions
+        obs = ArraySpec((2 * K,))
+        return EnvSpec(
+            agent_ids=self.agent_ids,
+            observations={a: obs for a in self.agent_ids},
+            actions={a: DiscreteSpec(K) for a in self.agent_ids},
+            state=ArraySpec((2 * K,)),
+        )
+
+    def _obs(self, state: MatrixGameState):
+        K = self.num_actions
+        valid = state.t > 0
+        oh = jax.nn.one_hot(state.last_joint, K).reshape(-1) * valid
+        return {a: oh for a in self.agent_ids}
+
+    def global_state(self, state: MatrixGameState):
+        K = self.num_actions
+        valid = state.t > 0
+        return jax.nn.one_hot(state.last_joint, K).reshape(-1) * valid
+
+    def reset(self, key):
+        del key
+        state = MatrixGameState(
+            t=jnp.zeros((), jnp.int32), last_joint=jnp.zeros((2,), jnp.int32)
+        )
+        ts = TimeStep(
+            step_type=jnp.asarray(StepType.FIRST, jnp.int32),
+            reward=shared_reward(self.agent_ids, jnp.zeros(())),
+            discount=jnp.ones(()),
+            observation=self._obs(state),
+        )
+        return state, ts
+
+    def step(self, state: MatrixGameState, actions):
+        a0 = actions["agent_0"]
+        a1 = actions["agent_1"]
+        r = self.payoff[a0, a1]
+        t = state.t + 1
+        new_state = MatrixGameState(t=t, last_joint=jnp.stack([a0, a1]))
+        done = t >= self.horizon
+        ts = TimeStep(
+            step_type=jnp.where(done, StepType.LAST, StepType.MID).astype(jnp.int32),
+            reward=shared_reward(self.agent_ids, r),
+            discount=jnp.where(done, 0.0, 1.0),
+            observation=self._obs(new_state),
+        )
+        return new_state, ts

@@ -1,0 +1,130 @@
+"""MPE simple-speaker-listener (Lowe et al. 2017) in pure JAX.
+
+Speaker (static) observes the target landmark colour and utters one of C
+discrete symbols; listener observes the utterance + relative landmark
+positions and must move to the target. Shared reward = -dist(listener,
+target). The classic asymmetric-information cooperative task from the
+paper's Fig. 6 experiments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.api import (
+    ArraySpec,
+    DiscreteSpec,
+    EnvSpec,
+    StepType,
+    TimeStep,
+    shared_reward,
+)
+
+_DIRS = jnp.array([[0.0, 0.0], [1.0, 0.0], [-1.0, 0.0], [0.0, 1.0], [0.0, -1.0]])
+
+
+class SLState(NamedTuple):
+    t: jnp.ndarray
+    listener_pos: jnp.ndarray  # (2,)
+    listener_vel: jnp.ndarray  # (2,)
+    landmarks: jnp.ndarray     # (C,2)
+    target: jnp.ndarray        # () int
+    last_msg: jnp.ndarray      # () int
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeakerListener:
+    num_landmarks: int = 3
+    horizon: int = 25
+    dt: float = 0.1
+    damping: float = 0.25
+    accel: float = 5.0
+
+    @property
+    def agent_ids(self):
+        return ("speaker", "listener")
+
+    def spec(self) -> EnvSpec:
+        C = self.num_landmarks
+        return EnvSpec(
+            agent_ids=self.agent_ids,
+            observations={
+                "speaker": ArraySpec((C,)),  # one-hot target colour
+                # vel(2) + rel landmarks (2C) + msg one-hot (C)
+                "listener": ArraySpec((2 + 2 * C + C,)),
+            },
+            actions={
+                "speaker": DiscreteSpec(C),
+                "listener": DiscreteSpec(5),
+            },
+            state=ArraySpec((2 + 2 + 2 * C + C + C,)),
+        )
+
+    def _obs(self, state: SLState):
+        C = self.num_landmarks
+        rel = (state.landmarks - state.listener_pos).reshape(-1)
+        msg = jax.nn.one_hot(state.last_msg, C)
+        return {
+            "speaker": jax.nn.one_hot(state.target, C),
+            "listener": jnp.concatenate([state.listener_vel, rel, msg]),
+        }
+
+    def global_state(self, state: SLState):
+        C = self.num_landmarks
+        return jnp.concatenate(
+            [
+                state.listener_pos,
+                state.listener_vel,
+                (state.landmarks - state.listener_pos).reshape(-1),
+                jax.nn.one_hot(state.target, C),
+                jax.nn.one_hot(state.last_msg, C),
+            ]
+        )
+
+    def reset(self, key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        lm = jax.random.uniform(k1, (self.num_landmarks, 2), minval=-1.0, maxval=1.0)
+        pos = jax.random.uniform(k2, (2,), minval=-1.0, maxval=1.0)
+        target = jax.random.randint(k3, (), 0, self.num_landmarks)
+        state = SLState(
+            t=jnp.zeros((), jnp.int32),
+            listener_pos=pos,
+            listener_vel=jnp.zeros((2,)),
+            landmarks=lm,
+            target=target,
+            last_msg=jnp.zeros((), jnp.int32),
+        )
+        ts = TimeStep(
+            step_type=jnp.asarray(StepType.FIRST, jnp.int32),
+            reward=shared_reward(self.agent_ids, jnp.zeros(())),
+            discount=jnp.ones(()),
+            observation=self._obs(state),
+        )
+        return state, ts
+
+    def step(self, state: SLState, actions):
+        msg = actions["speaker"]
+        f = _DIRS[actions["listener"]] * self.accel
+        vel = state.listener_vel * (1.0 - self.damping) + f * self.dt
+        pos = jnp.clip(state.listener_pos + vel * self.dt, -1.5, 1.5)
+        t = state.t + 1
+        r = -jnp.linalg.norm(pos - state.landmarks[state.target])
+        new_state = SLState(
+            t=t,
+            listener_pos=pos,
+            listener_vel=vel,
+            landmarks=state.landmarks,
+            target=state.target,
+            last_msg=msg,
+        )
+        done = t >= self.horizon
+        ts = TimeStep(
+            step_type=jnp.where(done, StepType.LAST, StepType.MID).astype(jnp.int32),
+            reward=shared_reward(self.agent_ids, r),
+            discount=jnp.where(done, 0.0, 1.0),
+            observation=self._obs(new_state),
+        )
+        return new_state, ts

@@ -1,0 +1,132 @@
+"""MPE simple-spread (Lowe et al. 2017) in pure JAX.
+
+N agents must cover N landmarks. Shared reward = -sum over landmarks of the
+distance to the closest agent, minus a collision penalty. Supports discrete
+actions (5: noop/right/left/up/down — the PettingZoo default) or continuous
+2D forces (for MADDPG/MAD4PG).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.api import (
+    ArraySpec,
+    DiscreteSpec,
+    EnvSpec,
+    StepType,
+    TimeStep,
+    agent_ids,
+    shared_reward,
+)
+
+_DIRS = jnp.array([[0.0, 0.0], [1.0, 0.0], [-1.0, 0.0], [0.0, 1.0], [0.0, -1.0]])
+
+
+class SpreadState(NamedTuple):
+    t: jnp.ndarray
+    pos: jnp.ndarray        # (N,2)
+    vel: jnp.ndarray        # (N,2)
+    landmarks: jnp.ndarray  # (N,2)
+
+
+@dataclasses.dataclass(frozen=True)
+class Spread:
+    num_agents: int = 3
+    horizon: int = 25
+    continuous: bool = False
+    dt: float = 0.1
+    damping: float = 0.25
+    accel: float = 5.0
+    collision_radius: float = 0.15
+
+    @property
+    def agent_ids(self):
+        return agent_ids(self.num_agents)
+
+    def obs_dim(self) -> int:
+        # own pos(2) + vel(2) + rel landmarks (2N) + rel other agents (2(N-1))
+        return 4 + 2 * self.num_agents + 2 * (self.num_agents - 1)
+
+    def spec(self) -> EnvSpec:
+        obs = ArraySpec((self.obs_dim(),))
+        if self.continuous:
+            act = ArraySpec((2,))
+        else:
+            act = DiscreteSpec(5)
+        return EnvSpec(
+            agent_ids=self.agent_ids,
+            observations={a: obs for a in self.agent_ids},
+            actions={a: act for a in self.agent_ids},
+            state=ArraySpec((4 * self.num_agents + 2 * self.num_agents,)),
+        )
+
+    def _obs(self, state: SpreadState):
+        out = {}
+        for i, a in enumerate(self.agent_ids):
+            rel_lm = (state.landmarks - state.pos[i]).reshape(-1)
+            others = jnp.delete(
+                state.pos, i, axis=0, assume_unique_indices=True
+            )
+            rel_ag = (others - state.pos[i]).reshape(-1)
+            out[a] = jnp.concatenate([state.pos[i], state.vel[i], rel_lm, rel_ag])
+        return out
+
+    def global_state(self, state: SpreadState):
+        return jnp.concatenate(
+            [state.pos.reshape(-1), state.vel.reshape(-1), state.landmarks.reshape(-1)]
+        )
+
+    def reset(self, key):
+        k1, k2 = jax.random.split(key)
+        pos = jax.random.uniform(k1, (self.num_agents, 2), minval=-1.0, maxval=1.0)
+        lm = jax.random.uniform(k2, (self.num_agents, 2), minval=-1.0, maxval=1.0)
+        state = SpreadState(
+            t=jnp.zeros((), jnp.int32), pos=pos, vel=jnp.zeros_like(pos), landmarks=lm
+        )
+        ts = TimeStep(
+            step_type=jnp.asarray(StepType.FIRST, jnp.int32),
+            reward=shared_reward(self.agent_ids, jnp.zeros(())),
+            discount=jnp.ones(()),
+            observation=self._obs(state),
+        )
+        return state, ts
+
+    def _forces(self, actions):
+        fs = []
+        for a in self.agent_ids:
+            act = actions[a]
+            if self.continuous:
+                fs.append(jnp.clip(act, -1.0, 1.0))
+            else:
+                fs.append(_DIRS[act])
+        return jnp.stack(fs)  # (N,2)
+
+    def step(self, state: SpreadState, actions):
+        f = self._forces(actions) * self.accel
+        vel = state.vel * (1.0 - self.damping) + f * self.dt
+        pos = jnp.clip(state.pos + vel * self.dt, -1.5, 1.5)
+        t = state.t + 1
+
+        # reward: -sum_l min_a dist(l, a) - collisions
+        d = jnp.linalg.norm(pos[:, None] - state.landmarks[None], axis=-1)  # (A,L)
+        cover = -jnp.sum(jnp.min(d, axis=0))
+        dag = jnp.linalg.norm(pos[:, None] - pos[None], axis=-1)
+        coll = (dag < self.collision_radius) & (
+            ~jnp.eye(self.num_agents, dtype=bool)
+        )
+        collision_pen = jnp.sum(coll) / 2.0
+        r = cover - collision_pen
+
+        new_state = SpreadState(t=t, pos=pos, vel=vel, landmarks=state.landmarks)
+        done = t >= self.horizon
+        ts = TimeStep(
+            step_type=jnp.where(done, StepType.LAST, StepType.MID).astype(jnp.int32),
+            reward=shared_reward(self.agent_ids, r),
+            discount=jnp.where(done, 0.0, 1.0),
+            observation=self._obs(new_state),
+        )
+        return new_state, ts

@@ -1,0 +1,118 @@
+"""The switch riddle (Foerster et al. 2016) — the paper's communication probe.
+
+N prisoners; each day one (uniformly random) is taken to the interrogation
+room, where they see a light switch they may toggle (via the message bit in
+communicating systems). Each agent can act: None (0) or Tell (1). On Tell the
+episode ends with shared reward +1 if every agent has visited the room,
+else -1. Max episode length 4N - 6 (as in the original paper).
+
+Observations per agent: [in_room, day/T]. Communication (switch state) is
+delivered by the system's communication module as an extra input; the env
+itself exposes `has_been` in the global state for centralised training.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.api import (
+    ArraySpec,
+    DiscreteSpec,
+    EnvSpec,
+    StepType,
+    TimeStep,
+    agent_ids,
+    shared_reward,
+)
+
+
+class SwitchState(NamedTuple):
+    t: jnp.ndarray           # day
+    in_room: jnp.ndarray     # (N,) one-hot: who is in the room today
+    has_been: jnp.ndarray    # (N,) bool
+    key: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class SwitchGame:
+    num_agents: int = 3
+
+    @property
+    def horizon(self):
+        return max(4 * self.num_agents - 6, 4)
+
+    @property
+    def agent_ids(self):
+        return agent_ids(self.num_agents)
+
+    def spec(self) -> EnvSpec:
+        obs = ArraySpec((2,))
+        return EnvSpec(
+            agent_ids=self.agent_ids,
+            observations={a: obs for a in self.agent_ids},
+            actions={a: DiscreteSpec(2) for a in self.agent_ids},
+            state=ArraySpec((2 * self.num_agents + 1,)),
+        )
+
+    def _obs(self, state: SwitchState):
+        frac = state.t.astype(jnp.float32) / self.horizon
+        return {
+            a: jnp.stack([state.in_room[i].astype(jnp.float32), frac])
+            for i, a in enumerate(self.agent_ids)
+        }
+
+    def global_state(self, state: SwitchState):
+        return jnp.concatenate(
+            [
+                state.in_room.astype(jnp.float32),
+                state.has_been.astype(jnp.float32),
+                (state.t.astype(jnp.float32) / self.horizon)[None],
+            ]
+        )
+
+    def reset(self, key):
+        key, sub = jax.random.split(key)
+        first = jax.random.randint(sub, (), 0, self.num_agents)
+        in_room = jax.nn.one_hot(first, self.num_agents)
+        state = SwitchState(
+            t=jnp.zeros((), jnp.int32),
+            in_room=in_room,
+            has_been=in_room > 0,
+            key=key,
+        )
+        ts = TimeStep(
+            step_type=jnp.asarray(StepType.FIRST, jnp.int32),
+            reward=shared_reward(self.agent_ids, jnp.zeros(())),
+            discount=jnp.ones(()),
+            observation=self._obs(state),
+        )
+        return state, ts
+
+    def step(self, state: SwitchState, actions):
+        # Tell only counts for the agent in the room.
+        acts = jnp.stack([actions[a] for a in self.agent_ids])  # (N,)
+        tell = jnp.sum(acts * state.in_room.astype(acts.dtype)) > 0
+        all_visited = jnp.all(state.has_been)
+        reward = jnp.where(tell, jnp.where(all_visited, 1.0, -1.0), 0.0)
+
+        key, sub = jax.random.split(state.key)
+        nxt = jax.random.randint(sub, (), 0, self.num_agents)
+        in_room = jax.nn.one_hot(nxt, self.num_agents)
+        t = state.t + 1
+        new_state = SwitchState(
+            t=t,
+            in_room=in_room,
+            has_been=state.has_been | (in_room > 0),
+            key=key,
+        )
+        done = tell | (t >= self.horizon)
+        ts = TimeStep(
+            step_type=jnp.where(done, StepType.LAST, StepType.MID).astype(jnp.int32),
+            reward=shared_reward(self.agent_ids, reward),
+            discount=jnp.where(done, 0.0, 1.0),
+            observation=self._obs(new_state),
+        )
+        return new_state, ts

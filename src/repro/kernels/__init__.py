@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+Each kernel package has:
+  kernel.py — pl.pallas_call with explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (interpret=True on CPU for validation)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+"""

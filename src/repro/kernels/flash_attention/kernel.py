@@ -1,0 +1,146 @@
+"""Flash attention Pallas TPU kernel.
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks) — the kv dim is the
+innermost (sequential) dim, so the online-softmax accumulators live in VMEM
+scratch across kv iterations. BlockSpecs tile Q/K/V into
+(block_q, head_dim) / (block_kv, head_dim) VMEM tiles; block sizes default
+to 128 to align with the MXU's 128x128 systolic array. GQA is handled in the
+K/V index_map (query head h reads kv head h // n_rep); causal and
+sliding-window masking are applied from program ids. Fully-masked kv blocks
+are skipped with pl.when (structural zero-work, the TPU analogue of the CUDA
+kernel's early-exit over tiles).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    scale: float,
+    block_q: int,
+    block_kv: int,
+    num_kv_blocks: int,
+    causal: bool,
+    window: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * block_q
+    kv_start = ik * block_kv
+
+    # Structural skip: blocks entirely above the causal diagonal or entirely
+    # outside the sliding window contribute nothing.
+    live = jnp.asarray(True)
+    if causal:
+        live = kv_start <= q_start + block_q - 1
+    if window:
+        live = jnp.logical_and(live, kv_start + block_kv - 1 >= q_start - window + 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bkv, hd)
+        s = q @ k.T  # (bq, bkv)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+        k_pos = kv_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+        if causal:
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        if window:
+            s = jnp.where(k_pos > q_pos - window, s, NEG_INF)
+
+        m_prev = m_ref[...]  # (bq, 1)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_cur)  # (bq, 1)
+        p = jnp.exp(s - m_cur)  # (bq, bkv)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        m_ref[...] = m_cur
+        v = v_ref[0, 0].astype(jnp.float32)  # (bkv, hd)
+        acc_ref[...] = acc_ref[...] * alpha + p @ v
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)  # (bq, 1)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+):
+    """q: (B, Hq, S, hd); k, v: (B, Hkv, S, hd). Returns (B, Hq, S, hd).
+
+    S must be divisible by the block sizes (ops.py pads otherwise).
+    """
+    B, Hq, S, hd = q.shape
+    Hkv = k.shape[1]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    n_rep = Hq // Hkv
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, S)
+    assert S % block_q == 0 and S % block_kv == 0, (S, block_q, block_kv)
+    nq = S // block_q
+    nkv = S // block_kv
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _fa_kernel,
+        scale=scale,
+        block_q=block_q,
+        block_kv=block_kv,
+        num_kv_blocks=nkv,
+        causal=causal,
+        window=window,
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec(
+                (1, 1, block_kv, hd), lambda b, h, iq, ik: (b, h // n_rep, ik, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_kv, hd), lambda b, h, iq, ik: (b, h // n_rep, ik, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,83 @@
+"""Public flash-attention op: jit wrapper with padding + interpret switch.
+
+Differentiable via jax.custom_vjp: the forward pass runs the Pallas kernel,
+the backward pass differentiates the pure-jnp oracle (on a real TPU the
+backward would be its own kernel; the custom_vjp seam is where it plugs in).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_kv", "interpret")
+)
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool | None = None,
+):
+    """q: (B,Hq,S,hd); k,v: (B,Hkv,S,hd) -> (B,Hq,S,hd).
+
+    Pads S up to a block multiple (padded queries are trimmed; padded keys are
+    masked out by the causal mask since they sit at positions > any real
+    query; for non-causal use the ref path).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+
+    @functools.partial(jax.custom_vjp)
+    def _op(q, k, v):
+        return _fwd_impl(q, k, v)
+
+    def _fwd_impl(q, k, v):
+        B, Hq, S, hd = q.shape
+        bq = min(block_q, S)
+        bkv = min(block_kv, S)
+        pad = (-S) % max(bq, bkv)
+        if pad:
+            zp = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            q, k, v = zp(q), zp(k), zp(v)
+        out = flash_attention_kernel(
+            q,
+            k,
+            v,
+            causal=causal,
+            window=window,
+            block_q=bq,
+            block_kv=bkv,
+            interpret=interpret,
+        )
+        return out[:, :, :S]
+
+    def _fwd(q, k, v):
+        return _fwd_impl(q, k, v), (q, k, v)
+
+    def _bwd(res, g):
+        q, k, v = res
+        _, vjp = jax.vjp(
+            lambda q, k, v: attention_ref(q, k, v, causal=causal, window=window),
+            q,
+            k,
+            v,
+        )
+        return vjp(g)
+
+    _op.defvjp(_fwd, _bwd)
+    return _op(q, k, v)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for flash attention (causal / sliding-window / GQA)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B,Hq,S,hd); k,v: (B,Hkv,S,hd) with Hq % Hkv == 0 -> (B,Hq,S,hd)."""
+    B, Hq, S, hd = q.shape
+    Hkv = k.shape[1]
+    n_rep = Hq // Hkv
+    if n_rep > 1:
+        k = jnp.repeat(k, n_rep, axis=1)
+        v = jnp.repeat(v, n_rep, axis=1)
+    scores = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / math.sqrt(hd)
+    pos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos[None, :] <= pos[:, None]
+    if window:
+        mask &= pos[None, :] > pos[:, None] - window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32)).astype(q.dtype)

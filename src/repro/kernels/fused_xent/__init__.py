@@ -1,0 +1,3 @@
+from repro.kernels.fused_xent.ops import fused_softmax_xent
+
+__all__ = ["fused_softmax_xent"]

@@ -1,0 +1,104 @@
+"""Fused softmax cross-entropy Pallas TPU kernel.
+
+For 100k+ vocabularies the (B*S, V) logit matrix dominates HBM traffic.
+This kernel never materialises it: grid (token blocks, vocab blocks) with
+the vocab dim innermost/sequential; each step computes a (bt, bv) logit tile
+on the MXU (x_tile @ w_tile), folds it into online logsumexp accumulators,
+and extracts the gold logit when the label falls inside the current tile.
+Peak VMEM = bt*d + d*bv + bt*bv fp32 tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _xent_kernel(
+    x_ref,       # (bt, d)
+    w_ref,       # (d, bv)
+    lab_ref,     # (bt, 1) int32
+    loss_ref,    # (bt, 1) out
+    m_ref,       # scratch (bt, 1)
+    l_ref,       # scratch (bt, 1)
+    gold_ref,    # scratch (bt, 1)
+    *,
+    block_v: int,
+    num_v_blocks: int,
+):
+    iv = pl.program_id(1)
+
+    @pl.when(iv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        gold_ref[...] = jnp.zeros_like(gold_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    logits = x @ w  # (bt, bv)
+
+    v_start = iv * block_v
+    labels = lab_ref[...]  # (bt, 1)
+    col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1) + v_start
+    is_gold = col == labels  # (bt, bv)
+    gold_ref[...] = gold_ref[...] + jnp.sum(
+        jnp.where(is_gold, logits, 0.0), axis=-1, keepdims=True
+    )
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+    l_ref[...] = l_ref[...] * jnp.exp(m_prev - m_cur) + jnp.sum(
+        jnp.exp(logits - m_cur), axis=-1, keepdims=True
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(iv == num_v_blocks - 1)
+    def _finalize():
+        lse = m_ref[...] + jnp.log(jnp.maximum(l_ref[...], 1e-30))
+        loss_ref[...] = (lse - gold_ref[...]).astype(loss_ref.dtype)
+
+
+def fused_xent_kernel(
+    x,
+    w,
+    labels,
+    *,
+    block_t: int = 128,
+    block_v: int = 512,
+    interpret: bool = False,
+):
+    """x: (T,d); w: (d,V); labels: (T,) int32 -> per-token loss (T,)."""
+    T, d = x.shape
+    V = w.shape[-1]
+    block_t = min(block_t, T)
+    block_v = min(block_v, V)
+    assert T % block_t == 0, (T, block_t)
+    assert V % block_v == 0, (V, block_v)
+    nt = T // block_t
+    nv = V // block_v
+
+    kernel = functools.partial(_xent_kernel, block_v=block_v, num_v_blocks=nv)
+    loss = pl.pallas_call(
+        kernel,
+        grid=(nt, nv),
+        in_specs=[
+            pl.BlockSpec((block_t, d), lambda it, iv: (it, 0)),
+            pl.BlockSpec((d, block_v), lambda it, iv: (0, iv)),
+            pl.BlockSpec((block_t, 1), lambda it, iv: (it, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_t, 1), lambda it, iv: (it, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, 1), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_t, 1), jnp.float32),
+            pltpu.VMEM((block_t, 1), jnp.float32),
+            pltpu.VMEM((block_t, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w, labels.reshape(T, 1).astype(jnp.int32))
+    return loss[:, 0]

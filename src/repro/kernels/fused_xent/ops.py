@@ -1,0 +1,48 @@
+"""Public fused-xent op: jit wrapper with padding + interpret switch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_xent.kernel import fused_xent_kernel
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_v", "interpret"))
+def fused_softmax_xent(
+    x,
+    w,
+    labels,
+    *,
+    block_t: int = 128,
+    block_v: int = 512,
+    interpret: bool | None = None,
+):
+    """x: (T,d); w: (d,V); labels: (T,) -> (T,) per-token loss.
+
+    Pads T to a token-block multiple (padded rows are trimmed). The vocab
+    dim is never padded — block_v is shrunk to the largest divisor of V
+    at most block_v, so no fake logits enter the logsumexp.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    T, d = x.shape
+    V = w.shape[-1]
+    bt = min(block_t, T)
+    # choose a vocab block that divides V to avoid padding the vocab dim
+    bv = min(block_v, V)
+    while V % bv:
+        bv -= 1
+    pad_t = (-T) % bt
+    if pad_t:
+        x = jnp.pad(x, ((0, pad_t), (0, 0)))
+        labels = jnp.pad(labels, ((0, pad_t),))
+    loss = fused_xent_kernel(
+        x, w, labels, block_t=bt, block_v=bv, interpret=interpret
+    )
+    return loss[:T]

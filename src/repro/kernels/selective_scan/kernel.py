@@ -1,0 +1,116 @@
+"""Mamba1 selective-scan Pallas TPU kernel.
+
+TPU adaptation of the CUDA selective-scan: instead of a warp-level scan with
+state in registers, the grid is (batch, d_inner blocks, seq chunks) with the
+seq dim innermost/sequential; the recurrent state (block_d, N) lives in VMEM
+scratch and persists across seq chunks. Each invocation streams one
+(chunk, block_d) tile of x/delta and one (chunk, N) tile of B/C from HBM into
+VMEM and runs the recurrence with a fori_loop over the chunk.
+
+block_d is chosen a multiple of 128 (lane width); N (the SSM state, 16 for
+mamba1) rides in the sublane dim of the (block_d, N) state tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(
+    x_ref,      # (1, chunk, bd)
+    dt_ref,     # (1, chunk, bd)
+    B_ref,      # (1, chunk, N)
+    C_ref,      # (1, chunk, N)
+    A_ref,      # (bd, N)
+    D_ref,      # (1, bd)
+    y_ref,      # (1, chunk, bd)
+    hout_ref,   # (1, bd, N) — final state, written on the last chunk
+    h_ref,      # scratch (bd, N) fp32
+    *,
+    chunk: int,
+    num_chunks: int,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    A = A_ref[...]            # (bd, N)
+    x = x_ref[0].astype(jnp.float32)    # (chunk, bd)
+    dt = dt_ref[0].astype(jnp.float32)  # (chunk, bd)
+    Bm = B_ref[0].astype(jnp.float32)   # (chunk, N)
+    Cm = C_ref[0].astype(jnp.float32)   # (chunk, N)
+
+    def step(t, carry):
+        h, ys = carry
+        d_t = jax.lax.dynamic_slice_in_dim(dt, t, 1, 0)  # (1, bd)
+        x_t = jax.lax.dynamic_slice_in_dim(x, t, 1, 0)   # (1, bd)
+        B_t = jax.lax.dynamic_slice_in_dim(Bm, t, 1, 0)  # (1, N)
+        C_t = jax.lax.dynamic_slice_in_dim(Cm, t, 1, 0)  # (1, N)
+        dA = jnp.exp(d_t.T * A)                          # (bd, N)
+        h = dA * h + (d_t * x_t).T * B_t                 # (bd, N)
+        y_t = h @ C_t.T                                  # (bd, 1)
+        ys = jax.lax.dynamic_update_slice_in_dim(ys, y_t.T, t, 0)
+        return h, ys
+
+    h0 = h_ref[...]
+    ys0 = jnp.zeros((chunk, x.shape[1]), jnp.float32)
+    h, ys = jax.lax.fori_loop(0, chunk, step, (h0, ys0))
+    h_ref[...] = h
+    y_ref[0] = (ys + x * D_ref[0]).astype(y_ref.dtype)
+
+    @pl.when(ic == num_chunks - 1)
+    def _emit_state():
+        hout_ref[0] = h
+
+
+def selective_scan_kernel(
+    x,
+    delta,
+    A,
+    B,
+    C,
+    D,
+    *,
+    block_d: int = 256,
+    chunk: int = 64,
+    interpret: bool = False,
+):
+    """x, delta: (b,S,di); A: (di,N); B,C: (b,S,N); D: (di,) -> y (b,S,di)."""
+    b, S, di = x.shape
+    N = A.shape[-1]
+    block_d = min(block_d, di)
+    chunk = min(chunk, S)
+    assert di % block_d == 0, (di, block_d)
+    assert S % chunk == 0, (S, chunk)
+    nd = di // block_d
+    nc = S // chunk
+
+    kernel = functools.partial(_scan_kernel, chunk=chunk, num_chunks=nc)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, nd, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda ib, id_, ic: (ib, ic, id_)),
+            pl.BlockSpec((1, chunk, block_d), lambda ib, id_, ic: (ib, ic, id_)),
+            pl.BlockSpec((1, chunk, N), lambda ib, id_, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, chunk, N), lambda ib, id_, ic: (ib, ic, 0)),
+            pl.BlockSpec((block_d, N), lambda ib, id_, ic: (id_, 0)),
+            pl.BlockSpec((1, block_d), lambda ib, id_, ic: (0, id_)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda ib, id_, ic: (ib, ic, id_)),
+            pl.BlockSpec((1, block_d, N), lambda ib, id_, ic: (ib, id_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, S, di), x.dtype),
+            jax.ShapeDtypeStruct((b, di, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        interpret=interpret,
+    )(x, delta, B, C, A, D.reshape(1, di))

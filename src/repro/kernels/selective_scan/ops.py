@@ -1,0 +1,68 @@
+"""Public selective-scan op: jit wrapper with padding + interpret switch.
+
+Differentiable via jax.custom_vjp (kernel forward, oracle backward — the
+same seam a TPU backward kernel would use).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.selective_scan.kernel import selective_scan_kernel
+from repro.kernels.selective_scan.ref import selective_scan_ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "chunk", "interpret"))
+def selective_scan(
+    x,
+    delta,
+    A,
+    B,
+    C,
+    D,
+    *,
+    block_d: int = 256,
+    chunk: int = 64,
+    interpret: bool | None = None,
+):
+    """Mamba1 scan; pads S to a chunk multiple (delta=0 padding is inert).
+
+    Returns (y: (b,S,di), h_final: (b,di,N) fp32).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    b, S, di = x.shape
+    c = min(chunk, S)
+
+    @jax.custom_vjp
+    def _op(x, delta, A, B, C, D):
+        return _fwd_impl(x, delta, A, B, C, D)
+
+    def _fwd_impl(x, delta, A, B, C, D):
+        pad = (-S) % c
+        if pad:
+            zp2 = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+            x_p, delta_p, B_p, C_p = zp2(x), zp2(delta), zp2(B), zp2(C)
+        else:
+            x_p, delta_p, B_p, C_p = x, delta, B, C
+        y, h_final = selective_scan_kernel(
+            x_p, delta_p, A, B_p, C_p, D, block_d=block_d, chunk=c,
+            interpret=interpret,
+        )
+        return y[:, :S], h_final
+
+    def _fwd(x, delta, A, B, C, D):
+        return _fwd_impl(x, delta, A, B, C, D), (x, delta, A, B, C, D)
+
+    def _bwd(res, g):
+        _, vjp = jax.vjp(selective_scan_ref, *res)
+        return vjp(g)
+
+    _op.defvjp(_fwd, _bwd)
+    return _op(x, delta, A, B, C, D)

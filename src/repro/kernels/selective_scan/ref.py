@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the mamba1 selective scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(x, delta, A, B, C, D):
+    """x, delta: (b,S,di); A: (di,N); B,C: (b,S,N); D: (di,) -> y (b,S,di).
+
+    h_t = exp(delta_t A) h_{t-1} + (delta_t x_t) outer B_t
+    y_t = h_t . C_t + D x_t
+    """
+    x32 = x.astype(jnp.float32)
+    delta = delta.astype(jnp.float32)
+    B = B.astype(jnp.float32)
+    C = C.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, d_t, B_t, C_t = inp
+        h = jnp.exp(d_t[..., None] * A) * h + (d_t * x_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    b, S, di = x.shape
+    h0 = jnp.zeros((b, di, A.shape[-1]), jnp.float32)
+    xs = (x32.swapaxes(0, 1), delta.swapaxes(0, 1), B.swapaxes(0, 1), C.swapaxes(0, 1))
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = ys.swapaxes(0, 1) + x32 * D
+    return y.astype(x.dtype), h

@@ -1,0 +1,200 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+mesh without allocating a single parameter.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch minitron-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+
+For each pair this builds abstract (ShapeDtypeStruct) params / optimizer
+state / batch / cache with their NamedShardings, jits the right step with
+explicit in/out shardings, lowers, compiles, and reports
+memory_analysis() (fits-per-device proof) + cost_analysis() + the
+collective schedule (for EXPERIMENTS.md §Dry-run / §Roofline).
+"""
+
+import argparse
+import functools
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import make_production_mesh, num_chips
+from repro.launch.steps import (
+    abstract_cache,
+    abstract_opt_state,
+    abstract_params,
+    batch_sharding,
+    input_specs,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    shape_config,
+)
+from repro.models.config import INPUT_SHAPES, get_input_shape
+from repro.models.model import model_flops_per_token
+from repro.roofline.analysis import roofline_terms
+
+
+def _cost_dict(compiled):
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return dict(ca)
+
+
+def dryrun_pair(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    verbose=True,
+    overrides: dict | None = None,
+):
+    """Lower+compile one (arch, shape). Returns a result-record dict.
+
+    `overrides` replaces ModelConfig fields (the §Perf hillclimb hook), e.g.
+    {"grad_accum": 8, "sharding": "fsdp_tp_sp"}.
+    """
+    import dataclasses as _dc
+
+    from repro.distributed.sharding import set_active_rules
+
+    cfg = shape_config(get_config(arch), get_input_shape(shape_name))
+    if overrides:
+        cfg = _dc.replace(cfg, **overrides)
+    shape = get_input_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = num_chips(mesh)
+
+    t0 = time.time()
+    params_abs, _ = abstract_params(cfg, mesh)
+    batch_abs = input_specs(cfg, shape, mesh)
+    rep = NamedSharding(mesh, P())
+
+    with jax.set_mesh(mesh), set_active_rules(cfg.sharding):
+        if shape.kind == "train":
+            opt, train_step = make_train_step(cfg)
+            opt_abs, _ = abstract_opt_state(cfg, opt, params_abs, mesh)
+            shardings = lambda tree: jax.tree_util.tree_map(
+                lambda x: x.sharding, tree
+            )
+            step = jax.jit(
+                train_step,
+                in_shardings=(shardings(params_abs), shardings(opt_abs),
+                              shardings(batch_abs)),
+                out_shardings=(shardings(params_abs), shardings(opt_abs), rep),
+                donate_argnums=(0, 1),
+            )
+            lowered = step.lower(params_abs, opt_abs, batch_abs)
+        elif shape.kind == "prefill":
+            prefill_step = make_prefill_step(cfg)
+            step = jax.jit(prefill_step)
+            lowered = step.lower(params_abs, batch_abs)
+        else:  # decode
+            serve_step = make_serve_step(cfg)
+            cache_abs = abstract_cache(cfg, shape, mesh)
+            step = jax.jit(serve_step, donate_argnums=(1,))
+            lowered = step.lower(params_abs, cache_abs, batch_abs)
+
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    cost = _cost_dict(compiled)
+    hlo = compiled.as_text()
+
+    # tokens processed per step (for model-flops). model_flops_per_token is
+    # 6*N_active (fwd 2N + bwd 4N); forward-only steps use the 2N third.
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        flops_factor = 1.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        flops_factor = 1.0 / 3.0
+    else:
+        tokens = shape.global_batch
+        flops_factor = 1.0 / 3.0
+    model_flops = model_flops_per_token(cfg) * tokens * flops_factor
+
+    report = roofline_terms(arch, shape_name, chips, cost, hlo, model_flops)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "chips": chips,
+        "compile_s": round(time.time() - t0, 1),
+        "bytes_per_device": {
+            "arguments": mem.argument_size_in_bytes,
+            "outputs": mem.output_size_in_bytes,
+            "temps": mem.temp_size_in_bytes,
+            "aliased": mem.alias_size_in_bytes,
+            "peak_est": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "cost": {k: cost.get(k) for k in ("flops", "bytes accessed") if k in cost},
+        "roofline": report.row(),
+    }
+    if verbose:
+        bpd = rec["bytes_per_device"]
+        r = rec["roofline"]
+        print(
+            f"[OK] {arch:24s} {shape_name:12s} mesh={rec['mesh']:9s} "
+            f"compile={rec['compile_s']:6.1f}s "
+            f"peak/dev={bpd['peak_est']/2**30:7.2f}GiB "
+            f"compute={r['compute_s']*1e3:9.3f}ms "
+            f"memory={r['memory_s']*1e3:9.3f}ms "
+            f"coll={r['collective_s']*1e3:9.3f}ms "
+            f"dom={r['dominant']:10s} useful={r['useful_ratio']:5.2f}"
+        )
+        sys.stdout.flush()
+    return rec
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=ARCH_IDS)
+    p.add_argument("--shape", choices=[s.name for s in INPUT_SHAPES])
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--json", default=None)
+    args = p.parse_args()
+
+    pairs = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in INPUT_SHAPES:
+                pairs.append((a, s.name))
+    else:
+        if not (args.arch and args.shape):
+            p.error("need --arch and --shape, or --all")
+        pairs = [(args.arch, args.shape)]
+
+    records, failures = [], []
+    for a, s in pairs:
+        try:
+            records.append(dryrun_pair(a, s, multi_pod=args.multi_pod))
+        except Exception as e:  # noqa: BLE001 — report every failure at the end
+            failures.append((a, s, f"{type(e).__name__}: {e}"))
+            print(f"[FAIL] {a} {s}: {type(e).__name__}: {str(e)[:200]}")
+            sys.stdout.flush()
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=1)
+    print(f"\n{len(records)} ok, {len(failures)} failed")
+    if failures:
+        for a, s, err in failures:
+            print(f"  FAIL {a} {s}: {err[:300]}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production mesh construction (TPU v5e pods).
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — smoke tests must keep seeing 1 CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (per chip) — used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW = 50e9                 # bytes/s per link
+
+SINGLE_POD_SHAPE = (16, 16)           # 256 chips
+MULTI_POD_SHAPE = (2, 16, 16)         # 2 pods x 256 chips
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD_SHAPE if multi_pod else SINGLE_POD_SHAPE
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def num_chips(mesh) -> int:
+    n = 1
+    for s in mesh.devices.shape:
+        n *= s
+    return n

@@ -1,0 +1,217 @@
+"""Step factories + abstract input specs for the dry-run and real training.
+
+For each (architecture, input shape) the dry-run lowers exactly one of:
+
+  train_4k     -> train_step   (fwd + bwd + AdamW update)
+  prefill_32k  -> prefill_step (full-prompt forward, returns decode cache)
+  decode_32k   -> serve_step   (ONE token against a seq_len KV cache)
+  long_500k    -> serve_step   (sub-quadratic variants; see shape_config)
+
+input_specs() returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no allocation) for every model input of that step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.distributed.sharding import logical_to_spec, rules_for, tree_shardings
+from repro.models import model as M
+from repro.models.config import InputShape, ModelConfig, get_input_shape
+
+
+# ----------------------------------------------------------- config per shape
+
+
+def shape_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Adapt an arch config to an input shape.
+
+    long_500k decode requires sub-quadratic attention: SSM/hybrid archs are
+    natively O(1)/token; attention archs get their sliding-window variant
+    (cfg.long_context_window) so the KV cache is O(window), not O(seq).
+    """
+    if shape.name == "long_500k" and cfg.arch_type != "ssm" and cfg.attn_window == 0:
+        cfg = dataclasses.replace(cfg, attn_window=cfg.long_context_window)
+    return cfg
+
+
+# ------------------------------------------------------------- abstract trees
+
+
+def abstract_params(cfg: ModelConfig, mesh=None):
+    shapes = jax.eval_shape(functools.partial(M.init_model, cfg=cfg), jax.random.key(0))
+    if mesh is None:
+        return shapes, None
+    axes = M.model_axes(cfg)
+    shardings = tree_shardings(axes, mesh, rules_for(cfg.sharding), shapes)
+    with_sharding = jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes,
+        shardings,
+    )
+    return with_sharding, shardings
+
+
+def make_optimizer(cfg: ModelConfig, lr: float = 3e-4):
+    return optim.chain(
+        optim.clip_by_global_norm(1.0),
+        optim.adamw(lr, weight_decay=0.1),
+    )
+
+
+def abstract_opt_state(cfg: ModelConfig, opt, params_abs, mesh=None):
+    shapes = jax.eval_shape(opt.init, params_abs)
+    if mesh is None:
+        return shapes, None
+
+    # optimizer state mirrors the param shardings elementwise; scalars and
+    # empty tuples are replicated.
+    def sharding_like(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        return None
+
+    params_flat = {
+        tuple(str(p) for p in path): s
+        for path, s in jax.tree_util.tree_flatten_with_path(params_abs)[0]
+    }
+
+    def assign(path, leaf):
+        if leaf.ndim == 0:
+            return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=NamedSharding(mesh, P()))
+        # match the trailing path against a param leaf (mu/nu trees mirror params)
+        for ppath, ps in params_flat.items():
+            if leaf.shape == ps.shape and path[-len(ppath):] == ppath:
+                return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=ps.sharding)
+        return jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype, sharding=NamedSharding(mesh, P())
+        )
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    leaves = [assign(tuple(str(p) for p in path), leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves), None
+
+
+def batch_sharding(mesh, batch: Optional[int] = None):
+    """Batch-dim sharding over (pod, data), dropping non-dividing axes."""
+    shape = (batch,) if batch is not None else None
+    spec = logical_to_spec(("batch",), rules_for("tp"), mesh, shape=shape)
+    return NamedSharding(mesh, spec)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh=None):
+    """Abstract model inputs for the given step kind."""
+    B, S = shape.global_batch, shape.seq_len
+    bs = batch_sharding(mesh, B) if mesh is not None else None
+
+    def tok(shp):
+        return jax.ShapeDtypeStruct(shp, jnp.int32, sharding=bs)
+
+    def emb(shp):
+        return jax.ShapeDtypeStruct(shp, cfg.activation_dtype, sharding=bs)
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.arch_type == "audio":
+            batch = {"tokens": tok((B, S, cfg.num_codebooks))}
+            if shape.kind == "train":
+                batch["labels"] = tok((B, S, cfg.num_codebooks))
+        elif cfg.arch_type == "vlm":
+            T = S - cfg.vision_tokens
+            batch = {
+                "tokens": tok((B, T)),
+                "vision_embeds": emb((B, cfg.vision_tokens, cfg.d_model)),
+            }
+            if shape.kind == "train":
+                batch["labels"] = tok((B, T))
+        else:
+            batch = {"tokens": tok((B, S))}
+            if shape.kind == "train":
+                batch["labels"] = tok((B, S))
+        return batch
+
+    # decode: ONE new token + a cache of S tokens
+    if cfg.arch_type == "audio":
+        return {"tokens": tok((B, 1, cfg.num_codebooks))}
+    return {"tokens": tok((B, 1))}
+
+
+def abstract_cache(cfg: ModelConfig, shape: InputShape, mesh=None):
+    """ShapeDtypeStructs for the decode cache (capacity = shape.seq_len)."""
+    shapes = jax.eval_shape(
+        functools.partial(M.init_cache, cfg, shape.global_batch, shape.seq_len)
+    )
+    if mesh is None:
+        return shapes
+    axes = M.cache_axes(cfg)
+    rules = rules_for(cfg.sharding)
+
+    def to_struct(s, ax):
+        spec = logical_to_spec(ax, rules, mesh, shape=s.shape)
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=NamedSharding(mesh, spec))
+
+    # shapes' leaves are ShapeDtypeStructs; the matching axes subtree (a tuple
+    # of logical names) is passed whole to to_struct by flatten_up_to.
+    return jax.tree_util.tree_map(to_struct, shapes, axes)
+
+
+# ------------------------------------------------------------------ steps
+
+
+def make_train_step(cfg: ModelConfig, lr: float = 3e-4):
+    opt = make_optimizer(cfg, lr)
+    k = max(cfg.grad_accum, 1)
+
+    def train_step(params, opt_state, batch):
+        if k == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                M.forward_train, has_aux=True
+            )(params, batch, cfg)
+        else:
+            # gradient accumulation over k microbatches: peak activation
+            # memory drops to one microbatch; grads accumulate in fp32.
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch
+            )
+
+            def micro_step(acc, mb):
+                (loss, metrics), grads = jax.value_and_grad(
+                    M.forward_train, has_aux=True
+                )(params, mb, cfg)
+                acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32) / k, acc, grads
+                )
+                return acc, metrics
+
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            grads, metrics_k = jax.lax.scan(micro_step, zero, micro)
+            metrics = jax.tree_util.tree_map(jnp.mean, metrics_k)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = optim.apply_updates(params, updates)
+        return params, opt_state, metrics
+
+    return opt, train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return M.prefill(params, batch, cfg)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, batch):
+        logits, cache = M.decode_step(params, cache, batch["tokens"], cfg)
+        # greedy next token (serving returns tokens, not logits)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return serve_step

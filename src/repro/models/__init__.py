@@ -1,0 +1,19 @@
+from repro.models.config import ModelConfig
+from repro.models.model import (
+    init_model,
+    forward_train,
+    prefill,
+    decode_step,
+    init_cache,
+    model_flops_per_token,
+)
+
+__all__ = [
+    "ModelConfig",
+    "init_model",
+    "forward_train",
+    "prefill",
+    "decode_step",
+    "init_cache",
+    "model_flops_per_token",
+]

@@ -1,0 +1,250 @@
+"""GQA attention: training/prefill (chunked online-softmax) + cached decode.
+
+The full-sequence path processes query blocks of `cfg.attn_chunk` with an
+online-softmax accumulator (a jnp re-statement of flash attention — the Pallas
+kernel in repro/kernels/flash_attention is the TPU version). This keeps peak
+activation memory at O(B * H * chunk * S) instead of O(B * H * S^2), which is
+what makes the 32k prefill shapes lower with sane memory analysis.
+
+Sliding-window attention (cfg.attn_window > 0) masks keys older than the
+window during training/prefill and uses a ring-buffer KV cache for decode —
+that is what makes `long_500k` sub-quadratic (O(S * W)) for dense archs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import with_logical_constraint
+from repro.models.layers import apply_rope, _trunc_normal
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg):
+    d, hd = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    so = 1.0 / math.sqrt(nq * hd)
+    dtype = cfg.activation_dtype
+    p = {
+        "wq": _trunc_normal(k1, (d, nq, hd), s, dtype),
+        "wk": _trunc_normal(k2, (d, nkv, hd), s, dtype),
+        "wv": _trunc_normal(k3, (d, nkv, hd), s, dtype),
+        "wo": _trunc_normal(k4, (nq, hd, d), so, dtype),
+    }
+    a = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    return p, a
+
+
+def _qkv(params, x, positions, cfg):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = with_logical_constraint(q, ("batch", None, "heads", None))
+    k = with_logical_constraint(k, ("batch", None, "kv_heads", None))
+    v = with_logical_constraint(v, ("batch", None, "kv_heads", None))
+    return q, k, v
+
+
+def _expand_kv(k, n_rep):
+    """(B,S,nkv,hd) -> (B,S,nq,hd) by repeating each kv head n_rep times."""
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def chunked_causal_attention(q, k, v, window: int, chunk: int, causal_skip: bool = False):
+    """Online-softmax attention over query blocks.
+
+    q,k,v: (B,S,H,hd) with H already expanded to query heads.
+    window: 0 for full causal, else sliding window length.
+    causal_skip: compute only the causally-live key prefix per query block
+      (static slices, unrolled over blocks) — halves attention FLOPs/bytes
+      versus the scanned full-row sweep at the price of a larger HLO.
+    Returns (B,S,H,hd).
+    """
+    B, S, H, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:  # pad queries to a chunk multiple; extra rows trimmed at the end
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sq = S + pad
+    n_blocks = Sq // chunk
+
+    kT = k.swapaxes(1, 2)  # (B,H,S,hd)
+    vT = v.swapaxes(1, 2)
+    qT = q.swapaxes(1, 2).reshape(B, H, n_blocks, chunk, hd)
+    del q
+
+    key_pos = jnp.arange(S)
+
+    if causal_skip and not window:
+        # Unrolled block-triangular sweep: block i attends keys [0,(i+1)*chunk)
+        def make_tri_block(i: int):
+            q_pos = i * chunk + jnp.arange(chunk)
+            kv_len = min((i + 1) * chunk, S)
+
+            @jax.checkpoint
+            def tri_block(qb, kT_i, vT_i):
+                scores = jnp.einsum(
+                    "bhqk,bhsk->bhqs", qb.astype(jnp.float32), kT_i.astype(jnp.float32)
+                ) * scale
+                mask = key_pos[:kv_len][None, :] <= q_pos[:, None]
+                scores = jnp.where(mask[None, None], scores, NEG_INF)
+                w = jax.nn.softmax(scores, axis=-1)
+                return jnp.einsum("bhqs,bhsk->bhqk", w, vT_i.astype(jnp.float32))
+
+            return tri_block, kv_len
+
+        outs = []
+        for i in range(n_blocks):
+            tri_block, kv_len = make_tri_block(i)
+            outs.append(tri_block(qT[:, :, i], kT[:, :, :kv_len], vT[:, :, :kv_len]))
+        out = jnp.stack(outs, axis=2).reshape(B, H, Sq, hd)[:, :, :S]
+        return out.swapaxes(1, 2).astype(k.dtype)
+
+    @jax.checkpoint
+    def block(qb, block_idx):
+        # qb: (B,H,chunk,hd)
+        q_pos = block_idx * chunk + jnp.arange(chunk)
+        scores = jnp.einsum("bhqk,bhsk->bhqs", qb.astype(jnp.float32), kT.astype(jnp.float32))
+        scores = scores * scale
+        mask = key_pos[None, :] <= q_pos[:, None]
+        if window:
+            mask &= key_pos[None, :] > q_pos[:, None] - window
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        return jnp.einsum("bhqs,bhsk->bhqk", w, vT.astype(jnp.float32))
+
+    def body(_, args):
+        qb, idx = args
+        return None, block(qb, idx)
+
+    _, out = jax.lax.scan(body, None, (qT.swapaxes(0, 2).swapaxes(1, 2), jnp.arange(n_blocks)))
+    # out: (n_blocks, B, H, chunk, hd)
+    out = out.transpose(1, 2, 0, 3, 4).reshape(B, H, Sq, hd)[:, :, :S]
+    return out.swapaxes(1, 2).astype(k.dtype)
+
+
+def attention_full(params, x, positions, cfg):
+    """Training / prefill attention. x: (B,S,d) -> (B,S,d)."""
+    q, k, v = _qkv(params, x, positions, cfg)
+    if cfg.use_pallas:
+        # TPU path: the Pallas flash kernel (GQA-aware — no head expansion)
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        out = flash_attention(
+            q.swapaxes(1, 2),
+            k.swapaxes(1, 2),
+            v.swapaxes(1, 2),
+            causal=True,
+            window=cfg.attn_window,
+        ).swapaxes(1, 2)
+    else:
+        n_rep = cfg.num_heads // cfg.num_kv_heads
+        k = _expand_kv(k, n_rep)
+        v = _expand_kv(v, n_rep)
+        out = chunked_causal_attention(
+            q, k, v, cfg.attn_window, cfg.attn_chunk, causal_skip=cfg.attn_causal_skip
+        )
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return with_logical_constraint(y, ("batch", None, "embed"))
+
+
+# ------------------------------------------------------------------ decode
+
+
+def init_kv_cache(cfg, batch, max_len, n_layers=None, dtype=None):
+    """Ring-buffer (windowed) or linear KV cache.
+
+    Layout: (L, B, C, n_kv, hd) where C = min(max_len, window or max_len).
+    """
+    L = cfg.num_layers if n_layers is None else n_layers
+    C = min(max_len, cfg.attn_window) if cfg.attn_window else max_len
+    dtype = dtype or cfg.activation_dtype
+    shape = (L, batch, C, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def place_kv_in_cache(k, C):
+    """Lay out prompt K/V (B,S,nkv,hd) into a capacity-C cache.
+
+    Position p lives at slot p % C (ring layout used by attention_decode).
+    If C >= S the prompt occupies slots 0..S-1 (rest zero/unwritten); else
+    the last C positions are kept, rolled so slot p % C holds position p.
+    """
+    S = k.shape[1]
+    if C >= S:
+        return jnp.pad(k, ((0, 0), (0, C - S), (0, 0), (0, 0)))
+    return jnp.roll(k[:, S - C :], shift=S % C, axis=1)
+
+
+def kv_cache_axes(cfg=None):
+    seq = "kv_seq" if (cfg is not None and cfg.shard_kv_seq) else None
+    return {
+        "k": (None, "batch", seq, "kv_heads", None),
+        "v": (None, "batch", seq, "kv_heads", None),
+    }
+
+
+def attention_decode(params, x, layer_cache, pos, cfg):
+    """Single-token decode. x: (B,1,d); layer_cache: {k,v}: (B,C,n_kv,hd);
+    pos: (B,) int32 — per-stream number of tokens already in context
+    (a scalar is broadcast), enabling continuous batching where streams are
+    at different depths.
+
+    Returns (y, new_layer_cache).
+    """
+    B = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None]
+    q, k_new, v_new = _qkv(params, x, positions, cfg)
+
+    C = layer_cache["k"].shape[1]
+    write_idx = (pos % C) if cfg.attn_window else jnp.minimum(pos, C - 1)
+    bidx = jnp.arange(B)
+    k_cache = layer_cache["k"].at[bidx, write_idx].set(
+        k_new[:, 0].astype(layer_cache["k"].dtype)
+    )
+    v_cache = layer_cache["v"].at[bidx, write_idx].set(
+        v_new[:, 0].astype(layer_cache["v"].dtype)
+    )
+
+    n_rep = cfg.num_heads // cfg.num_kv_heads
+    k = _expand_kv(k_cache, n_rep)  # (B,C,H,hd)
+    v = _expand_kv(v_cache, n_rep)
+
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    scores = jnp.einsum(
+        "bqhk,bshk->bhqs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale  # (B,H,1,C)
+
+    slot = jnp.arange(C)
+    if cfg.attn_window:
+        # valid slots: written (slot <= pos when pos < C) and within window
+        age = (write_idx[:, None] - slot[None, :]) % C  # 0 = current token
+        valid = age <= jnp.minimum(pos, C - 1)[:, None]  # (B,C)
+    else:
+        valid = slot[None, :] <= pos[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshk->bqhk", w, v.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    y = with_logical_constraint(y, ("batch", None, "embed"))
+    return y, {"k": k_cache, "v": v_cache}

@@ -1,0 +1,32 @@
+"""MusicGen codebook-interleaving utilities (delay pattern).
+
+MusicGen decodes K EnCodec codebooks with a *delay* interleave: codebook k is
+shifted right by k steps so that at generation step t the model predicts
+codebook k's token for frame t-k. apply/revert are exact inverses over the
+valid region; shifted-in slots hold `pad_id`.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def apply_delay_pattern(tokens, pad_id: int):
+    """tokens: (B, S, K) -> delayed (B, S, K)."""
+    B, S, K = tokens.shape
+    cols = []
+    for k in range(K):
+        col = tokens[:, : S - k, k]
+        col = jnp.pad(col, ((0, 0), (k, 0)), constant_values=pad_id)
+        cols.append(col)
+    return jnp.stack(cols, axis=-1)
+
+
+def revert_delay_pattern(tokens, pad_id: int):
+    """Inverse of apply_delay_pattern; trailing slots become pad_id."""
+    B, S, K = tokens.shape
+    cols = []
+    for k in range(K):
+        col = tokens[:, k:, k]
+        col = jnp.pad(col, ((0, 0), (0, k)), constant_values=pad_id)
+        cols.append(col)
+    return jnp.stack(cols, axis=-1)

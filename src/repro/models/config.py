@@ -1,0 +1,200 @@
+"""Model configuration covering all assigned architecture families."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str  # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    # --- MoE ---
+    num_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0  # per-expert hidden dim; 0 -> d_ff
+    capacity_factor: float = 1.25
+    moe_group_size: int = 512  # tokens per dispatch group
+    router_aux_weight: float = 0.01
+    router_z_weight: float = 1e-3
+
+    # --- SSM (mamba) ---
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64  # mamba2 head size
+    ssm_chunk: int = 128    # chunk length for scans
+    mamba_version: int = 1
+
+    # --- hybrid (zamba2-style shared attention) ---
+    attn_every: int = 0  # apply the shared attention block after every N core layers
+    shared_attn: bool = False
+
+    # --- attention variants ---
+    attn_window: int = 0  # 0 = full causal; >0 = sliding window size
+    # window used when constructing the long_500k variant of an attention
+    # arch (dense/vlm/audio/hybrid); see launch.dryrun.shape_config
+    long_context_window: int = 8192
+    rope_theta: float = 10000.0
+    attn_chunk: int = 512  # query-block size for the chunked jnp attention path
+
+    # --- multimodal ---
+    num_codebooks: int = 0   # audio: EnCodec codebooks
+    vision_tokens: int = 0   # vlm: number of patch-embedding tokens prepended
+
+    # --- distribution ---
+    sharding: str = "tp"  # "tp" | "fsdp_tp" | "fsdp_tp_sp" (distributed.sharding)
+    grad_accum: int = 1   # microbatches per train_step (activation memory / k)
+    # save post-collective layer outputs under remat so backward does not
+    # re-run forward all-reduces (communication-avoiding remat policy)
+    save_layer_outputs: bool = False
+    # compute only the causally-live key blocks per query block (unrolled
+    # static slices instead of the scanned full-row sweep): ~2x attention
+    # FLOP reduction at larger HLO size
+    attn_causal_skip: bool = False
+    # flash-decoding-style KV cache sharding: shard the cache's sequence dim
+    # over the model axis (softmax combines via two small all-reduces) —
+    # the lever for GQA archs whose n_kv < model-axis size, where head
+    # sharding can't apply and replicated 32k caches blow past HBM
+    shard_kv_seq: bool = False
+
+    # --- numerics / training ---
+    dtype: str = "bfloat16"
+    remat: bool = True
+    tie_embeddings: bool = False
+    xent_chunk: int = 512  # sequence-chunk for large-vocab softmax xent
+    use_pallas: bool = False  # TPU path; CPU dry-run/tests use jnp reference
+
+    # citation for the assigned config
+    source: str = ""
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.num_heads > 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.arch_type == "moe" and self.moe_d_ff == 0:
+            object.__setattr__(self, "moe_d_ff", self.d_ff)
+
+    @property
+    def activation_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return max(1, self.d_inner // self.ssm_head_dim)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.arch_type == "ssm"
+
+    @property
+    def num_attn_invocations(self) -> int:
+        """Shared-attention invocations in a hybrid stack."""
+        if not self.attn_every:
+            return 0
+        return self.num_layers // self.attn_every
+
+    def param_count(self) -> int:
+        """Approximate parameter count (used for 6ND model-flops)."""
+        d, L, v = self.d_model, self.num_layers, self.vocab
+        hd = self.head_dim
+        nq, nkv = self.num_heads, self.num_kv_heads
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        if self.num_codebooks:
+            emb = self.num_codebooks * v * d * 2
+        per_layer = 0
+        if self.arch_type in ("dense", "vlm", "audio"):
+            attn = d * hd * (nq + 2 * nkv) + nq * hd * d
+            mlp = 3 * d * self.d_ff
+            per_layer = attn + mlp + 2 * d
+        elif self.arch_type == "moe":
+            attn = d * hd * (nq + 2 * nkv) + nq * hd * d
+            moe = self.num_experts * 3 * d * self.moe_d_ff + d * self.num_experts
+            per_layer = attn + moe + 2 * d
+        elif self.arch_type in ("ssm", "hybrid"):
+            di, n = self.d_inner, self.ssm_state
+            if self.mamba_version == 1:
+                dt_rank = max(1, d // 16)
+                per_layer = (
+                    d * 2 * di          # in_proj
+                    + di * self.ssm_conv
+                    + di * (dt_rank + 2 * n)  # x_proj
+                    + dt_rank * di      # dt_proj
+                    + di * n + di       # A_log, D
+                    + di * d            # out_proj
+                    + d
+                )
+            else:
+                h = self.ssm_heads
+                per_layer = (
+                    d * (2 * di + 2 * n + h)  # in_proj (z,x,B,C,dt)
+                    + (di + 2 * n) * self.ssm_conv
+                    + h + h                   # A_log, D
+                    + di * d
+                    + d
+                )
+        total = emb + L * per_layer
+        if self.arch_type == "hybrid" and self.shared_attn:
+            attn = d * hd * (nq + 2 * nkv) + nq * hd * d
+            total += attn + 3 * d * self.d_ff + 2 * d
+        return int(total)
+
+    def flops_param_count(self) -> int:
+        """Params as-if-unshared: weight-shared blocks (zamba2's shared
+        attention) are counted once per *invocation*, so 6*N*D reflects the
+        compute actually performed rather than unique parameters."""
+        n = self.active_param_count()
+        if self.arch_type == "hybrid" and self.shared_attn and self.attn_every:
+            d, hd = self.d_model, self.head_dim
+            nq, nkv = self.num_heads, self.num_kv_heads
+            attn = d * hd * (nq + 2 * nkv) + nq * hd * d
+            shared = attn + 3 * d * self.d_ff + 2 * d
+            n += shared * (self.num_attn_invocations - 1)
+        return int(n)
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE activates top_k of num_experts)."""
+        if self.arch_type != "moe":
+            return self.param_count()
+        d, L = self.d_model, self.num_layers
+        hd, nq, nkv = self.head_dim, self.num_heads, self.num_kv_heads
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        attn = d * hd * (nq + 2 * nkv) + nq * hd * d
+        moe_active = self.top_k * 3 * d * self.moe_d_ff + d * self.num_experts
+        return int(emb + L * (attn + moe_active + 2 * d))
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: Tuple[InputShape, ...] = (
+    InputShape("train_4k", 4_096, 256, "train"),
+    InputShape("prefill_32k", 32_768, 32, "prefill"),
+    InputShape("decode_32k", 32_768, 128, "decode"),
+    InputShape("long_500k", 524_288, 1, "decode"),
+)
+
+
+def get_input_shape(name: str) -> InputShape:
+    for s in INPUT_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)

@@ -1,0 +1,171 @@
+"""Function-style layers shared by all LM backbones.
+
+Each init_* returns (params, axes) where axes mirrors params with tuples of
+logical axis names for repro.distributed.sharding.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import with_logical_constraint
+
+
+def _trunc_normal(key, shape, stddev, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * stddev).astype(dtype)
+
+
+# ---------------------------------------------------------------- RMSNorm
+
+
+def init_rmsnorm(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}, {"scale": ("embed",)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- Embedding
+
+
+def init_embedding(key, vocab, d, dtype):
+    p = {"embedding": _trunc_normal(key, (vocab, d), 1.0, dtype)}
+    a = {"embedding": ("vocab", "embed")}
+    return p, a
+
+
+def embed(params, ids):
+    return jnp.take(params["embedding"], ids, axis=0)
+
+
+def init_unembed(key, d, vocab, dtype):
+    p = {"w": _trunc_normal(key, (d, vocab), 1.0 / math.sqrt(d), dtype)}
+    a = {"w": ("embed", "vocab")}
+    return p, a
+
+
+# ---------------------------------------------------------------- RoPE
+
+
+def rope_frequencies(head_dim, theta):
+    half = head_dim // 2
+    return theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- SwiGLU MLP
+
+
+def init_mlp(key, d, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(d_ff)
+    p = {
+        "w_gate": _trunc_normal(k1, (d, d_ff), s_in, dtype),
+        "w_up": _trunc_normal(k2, (d, d_ff), s_in, dtype),
+        "w_down": _trunc_normal(k3, (d_ff, d), s_out, dtype),
+    }
+    a = {
+        "w_gate": ("embed", "ffn"),
+        "w_up": ("embed", "ffn"),
+        "w_down": ("ffn", "embed"),
+    }
+    return p, a
+
+
+def mlp(params, x):
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    h = with_logical_constraint(h, ("batch", None, "ffn"))
+    return h @ params["w_down"]
+
+
+# ------------------------------------------------- chunked softmax x-entropy
+
+
+def softmax_xent_logits(logits, labels):
+    """Per-token cross entropy from logits; fp32 reductions."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return lse - gold
+
+
+def chunked_softmax_xent(x, w_unembed, labels, chunk, mask=None):
+    """Mean next-token loss without materialising (B,S,V) logits.
+
+    Scans over sequence chunks; each chunk's logits are rematerialised on the
+    backward pass (jax.checkpoint), so peak memory is O(B*chunk*V). The Pallas
+    `fused_xent` kernel is the TPU version of the same blocking.
+
+    x: (B,S,d), labels: (B,S) int, mask: optional (B,S) weighting.
+    """
+    B, S, d = x.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    rem = S - n * chunk
+
+    @jax.checkpoint
+    def chunk_loss(xc, lc, mc):
+        logits = xc @ w_unembed  # (B,c,V)
+        losses = softmax_xent_logits(logits, lc)
+        return jnp.sum(losses * mc), jnp.sum(mc)
+
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+
+    def body(carry, args):
+        tot, cnt = carry
+        xc, lc, mc = args
+        s, c = chunk_loss(xc, lc, mc)
+        return (tot + s, cnt + c), None
+
+    xs = (
+        x[:, : n * chunk].reshape(B, n, chunk, d).swapaxes(0, 1),
+        labels[:, : n * chunk].reshape(B, n, chunk).swapaxes(0, 1),
+        mask[:, : n * chunk].reshape(B, n, chunk).swapaxes(0, 1),
+    )
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), xs)
+    if rem:
+        s, c = chunk_loss(x[:, n * chunk :], labels[:, n * chunk :], mask[:, n * chunk :])
+        tot, cnt = tot + s, cnt + c
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------- conv1d
+
+
+def causal_depthwise_conv1d(x, weight, state=None):
+    """Depthwise causal conv over time. x: (B,S,C), weight: (C,K).
+
+    If `state` is given it is the last K-1 inputs (B,K-1,C) and x is a single
+    step (B,1,C); returns (y, new_state).
+    """
+    K = weight.shape[-1]
+    if state is not None:
+        window = jnp.concatenate([state, x], axis=1)  # (B,K,C)
+        y = jnp.einsum("bkc,ck->bc", window, weight)[:, None]
+        return y, window[:, 1:]
+    # Sum of K shifted copies — avoids materialising (B,S,K,C) windows.
+    S = x.shape[1]
+    y = x * weight[:, K - 1]
+    for k in range(K - 1):
+        shift = K - 1 - k
+        shifted = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :S]
+        y = y + shifted * weight[:, k]
+    return y

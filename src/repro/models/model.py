@@ -1,0 +1,649 @@
+"""LM backbone assembly for all assigned architecture families.
+
+Public API (all pure functions over param pytrees):
+
+  init_model(key, cfg)            -> params
+  model_axes(cfg)                 -> pytree of logical-axis tuples (matches params)
+  forward_train(params, batch, cfg) -> (loss, metrics)
+  init_cache(cfg, batch, max_len) -> cache pytree
+  prefill(params, batch, cfg)     -> (last_hidden_logits, cache)
+  decode_step(params, cache, tokens, cfg) -> (logits, new_cache)
+
+Layers are stacked along a leading L dim and driven by lax.scan (compact HLO
+even for 126-layer configs); each scan body is jax.checkpoint-ed when
+cfg.remat. Hybrid (zamba2-style) stacks mamba2 layers and applies a *shared*
+attention+MLP block (single param set) after every cfg.attn_every layers,
+each invocation with its own KV-cache slice.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import with_logical_constraint
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    chunked_softmax_xent,
+    embed,
+    init_embedding,
+    init_mlp,
+    init_rmsnorm,
+    init_unembed,
+    mlp,
+    rmsnorm,
+)
+
+# ----------------------------------------------------------------- blocks
+
+
+def core_kind(cfg: ModelConfig) -> str:
+    if cfg.arch_type in ("dense", "vlm", "audio"):
+        return "dense"
+    if cfg.arch_type == "moe":
+        return "moe"
+    if cfg.arch_type == "ssm":
+        return f"mamba{cfg.mamba_version}"
+    if cfg.arch_type == "hybrid":
+        return "mamba2"
+    raise ValueError(cfg.arch_type)
+
+
+def init_block(key, cfg: ModelConfig):
+    """One core layer. Returns (params, axes)."""
+    kind = core_kind(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if kind == "dense":
+        pa, aa = attn_lib.init_attention(k1, cfg)
+        pm, am = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.activation_dtype)
+        pn1, an1 = init_rmsnorm(cfg.d_model)
+        pn2, an2 = init_rmsnorm(cfg.d_model)
+        return (
+            {"norm1": pn1, "attn": pa, "norm2": pn2, "mlp": pm},
+            {"norm1": an1, "attn": aa, "norm2": an2, "mlp": am},
+        )
+    if kind == "moe":
+        pa, aa = attn_lib.init_attention(k1, cfg)
+        pm, am = moe_lib.init_moe(k2, cfg)
+        pn1, an1 = init_rmsnorm(cfg.d_model)
+        pn2, an2 = init_rmsnorm(cfg.d_model)
+        return (
+            {"norm1": pn1, "attn": pa, "norm2": pn2, "moe": pm},
+            {"norm1": an1, "attn": aa, "norm2": an2, "moe": am},
+        )
+    if kind == "mamba1":
+        pm, am = ssm_lib.init_mamba1(k1, cfg)
+        pn, an = init_rmsnorm(cfg.d_model)
+        return {"norm": pn, "mamba": pm}, {"norm": an, "mamba": am}
+    if kind == "mamba2":
+        pm, am = ssm_lib.init_mamba2(k1, cfg)
+        pn, an = init_rmsnorm(cfg.d_model)
+        return {"norm": pn, "mamba": pm}, {"norm": an, "mamba": am}
+    raise ValueError(kind)
+
+
+def init_shared_attn(key, cfg: ModelConfig):
+    """Zamba2-style shared transformer block (attention + MLP, one param set)."""
+    k1, k2 = jax.random.split(key)
+    pa, aa = attn_lib.init_attention(k1, cfg)
+    pm, am = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.activation_dtype)
+    pn1, an1 = init_rmsnorm(cfg.d_model)
+    pn2, an2 = init_rmsnorm(cfg.d_model)
+    return (
+        {"norm1": pn1, "attn": pa, "norm2": pn2, "mlp": pm},
+        {"norm1": an1, "attn": aa, "norm2": an2, "mlp": am},
+    )
+
+
+def _stack_axes(axes):
+    """Prepend the stacked-layer dim (unsharded) to every leaf."""
+    return jax.tree_util.tree_map(
+        lambda a: (None, *a), axes, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+# ------------------------------------------------------------------ model
+
+
+def init_model(key, cfg: ModelConfig):
+    params, _ = _init_model_with_axes(key, cfg)
+    return params
+
+
+def model_axes(cfg: ModelConfig):
+    """Logical-axis tree matching init_model's output (no arrays created)."""
+    _, block_axes = _eval_axes(lambda k: init_block(k, cfg))
+    out = {"layers": _stack_axes(block_axes)}
+    _, emb_axes = _eval_axes(
+        lambda k: _init_embed_group(k, cfg)
+    )
+    out.update(emb_axes)
+    if cfg.arch_type == "hybrid" and cfg.shared_attn:
+        _, sa = _eval_axes(lambda k: init_shared_attn(k, cfg))
+        out["shared_attn"] = sa
+    return out
+
+
+def _eval_axes(fn):
+    """Run an init fn abstractly, returning (param_shapes, axes)."""
+    axes_box = {}
+
+    def wrapped(k):
+        p, a = fn(k)
+        axes_box["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(wrapped, jax.random.key(0))
+    return shapes, axes_box["axes"]
+
+
+def _init_embed_group(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    params, axes = {}, {}
+    if cfg.num_codebooks:
+        # audio: per-codebook embeddings and heads
+        def emb_init(k):
+            p, _ = init_embedding(k, cfg.vocab, cfg.d_model, cfg.activation_dtype)
+            return p
+
+        def head_init(k):
+            p, _ = init_unembed(k, cfg.d_model, cfg.vocab, cfg.activation_dtype)
+            return p
+
+        params["embed"] = jax.vmap(emb_init)(
+            jax.random.split(k1, cfg.num_codebooks)
+        )
+        axes["embed"] = {"embedding": ("codebooks", "vocab", "embed")}
+        params["unembed"] = jax.vmap(head_init)(
+            jax.random.split(k2, cfg.num_codebooks)
+        )
+        axes["unembed"] = {"w": ("codebooks", "embed", "vocab")}
+    else:
+        pe, ae = init_embedding(k1, cfg.vocab, cfg.d_model, cfg.activation_dtype)
+        params["embed"] = pe
+        axes["embed"] = ae
+        if not cfg.tie_embeddings:
+            pu, au = init_unembed(k2, cfg.d_model, cfg.vocab, cfg.activation_dtype)
+            params["unembed"] = pu
+            axes["unembed"] = au
+    pn, an = init_rmsnorm(cfg.d_model)
+    params["final_norm"] = pn
+    axes["final_norm"] = an
+    return params, axes
+
+
+def _init_model_with_axes(key, cfg: ModelConfig):
+    k_layers, k_emb, k_shared = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+
+    _, block_axes = _eval_axes(lambda k: init_block(k, cfg))
+
+    def block_params_only(k):
+        p, _ = init_block(k, cfg)
+        return p
+
+    stacked = jax.vmap(block_params_only)(layer_keys)
+    params = {"layers": stacked}
+    axes = {"layers": _stack_axes(block_axes)}
+
+    emb_p, emb_a = _init_embed_group(k_emb, cfg)
+    params.update(emb_p)
+    axes.update(emb_a)
+
+    if cfg.arch_type == "hybrid" and cfg.shared_attn:
+        sp, sa = init_shared_attn(k_shared, cfg)
+        params["shared_attn"] = sp
+        axes["shared_attn"] = sa
+    return params, axes
+
+
+# --------------------------------------------------------------- embedding
+
+
+def _embed_tokens(params, batch, cfg: ModelConfig):
+    """Returns (h, text_offset) — text_offset is #prefix tokens (vlm)."""
+    if cfg.arch_type == "audio":
+        # tokens: (B,S,K) — sum codebook embeddings
+        embs = params["embed"]["embedding"]  # (K, vocab, d)
+        return _audio_embed(embs, batch["tokens"]), 0
+    if cfg.arch_type == "vlm":
+        text = embed(params["embed"], batch["tokens"])  # (B,T,d)
+        vision = batch["vision_embeds"].astype(text.dtype)  # (B,V,d)
+        return jnp.concatenate([vision, text], axis=1), vision.shape[1]
+    return embed(params["embed"], batch["tokens"]), 0
+
+
+def _audio_embed(embs, toks):
+    """embs: (K,V,d); toks: (B,S,K) -> (B,S,d) summed over codebooks."""
+    K = embs.shape[0]
+    h = 0.0
+    for k in range(K):
+        h = h + jnp.take(embs[k], toks[..., k], axis=0)
+    return h
+
+
+def _unembed_weight(params, cfg: ModelConfig):
+    if cfg.num_codebooks:
+        return params["unembed"]["w"]  # (K,d,V)
+    if cfg.tie_embeddings:
+        return params["embed"]["embedding"].T
+    return params["unembed"]["w"]
+
+
+# ------------------------------------------------------------- layer scan
+
+
+def _ckpt_name(x, cfg: ModelConfig):
+    """Tag post-collective sublayer outputs so the remat policy can save
+    them — backward then never re-runs the forward all-reduces."""
+    if cfg.save_layer_outputs:
+        from jax.ad_checkpoint import checkpoint_name
+
+        return checkpoint_name(x, "layer_out")
+    return x
+
+
+def _remat(body, cfg: ModelConfig):
+    if not cfg.remat:
+        return body
+    if cfg.save_layer_outputs:
+        policy = jax.checkpoint_policies.save_only_these_names("layer_out")
+        return jax.checkpoint(body, policy=policy)
+    return jax.checkpoint(body)
+
+
+def _run_layers_train(params, h, cfg: ModelConfig):
+    """Scan all layers (training/prefill, no cache). Returns (h, aux_losses)."""
+    L = cfg.num_layers
+    positions = jnp.arange(h.shape[1])
+    shared = params.get("shared_attn")
+
+    def body(carry, xs):
+        h, aux, zl = carry
+        layer_params, idx = xs
+        kind = core_kind(cfg)
+        if kind == "dense":
+            h = h + _ckpt_name(
+                attn_lib.attention_full(
+                    layer_params["attn"], rmsnorm(layer_params["norm1"], h), positions, cfg
+                ),
+                cfg,
+            )
+            h = h + _ckpt_name(
+                mlp(layer_params["mlp"], rmsnorm(layer_params["norm2"], h)), cfg
+            )
+        elif kind == "moe":
+            h = h + _ckpt_name(
+                attn_lib.attention_full(
+                    layer_params["attn"], rmsnorm(layer_params["norm1"], h), positions, cfg
+                ),
+                cfg,
+            )
+            y, a, z = moe_lib.moe_ffn(
+                layer_params["moe"], rmsnorm(layer_params["norm2"], h), cfg
+            )
+            h = h + _ckpt_name(y, cfg)
+            aux, zl = aux + a, zl + z
+        else:  # mamba1 / mamba2
+            fwd = ssm_lib.mamba1_forward if kind == "mamba1" else ssm_lib.mamba2_forward
+            y, _ = fwd(layer_params["mamba"], rmsnorm(layer_params["norm"], h), cfg)
+            h = h + _ckpt_name(y, cfg)
+            if shared is not None and cfg.attn_every:
+                def run_shared(h):
+                    hh = h + _ckpt_name(
+                        attn_lib.attention_full(
+                            shared["attn"], rmsnorm(shared["norm1"], h), positions, cfg
+                        ),
+                        cfg,
+                    )
+                    return hh + _ckpt_name(
+                        mlp(shared["mlp"], rmsnorm(shared["norm2"], hh)), cfg
+                    )
+
+                h = jax.lax.cond(
+                    (idx + 1) % cfg.attn_every == 0, run_shared, lambda h: h, h
+                )
+        h = with_logical_constraint(h, ("batch", "seq", "embed"))
+        return (h, aux, zl), None
+
+    body_fn = _remat(body, cfg)
+    (h, aux, zl), _ = jax.lax.scan(
+        body_fn,
+        (h, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (params["layers"], jnp.arange(L)),
+    )
+    return h, (aux / L, zl / L)
+
+
+# ---------------------------------------------------------------- training
+
+
+def forward_train(params, batch, cfg: ModelConfig):
+    """Next-token loss. batch keys: tokens, labels (+ vision_embeds for vlm).
+
+    Returns (loss, metrics dict).
+    """
+    h, text_offset = _embed_tokens(params, batch, cfg)
+    h = with_logical_constraint(h, ("batch", "seq", "embed"))
+    h, (aux, zl) = _run_layers_train(params, h, cfg)
+    h = rmsnorm(params["final_norm"], h)
+
+    w = _unembed_weight(params, cfg)
+    labels = batch["labels"]
+    if cfg.arch_type == "vlm":
+        # predictions for text token i come from position V-1+i
+        T = labels.shape[1]
+        h = jax.lax.dynamic_slice_in_dim(h, text_offset - 1, T, axis=1)
+    if cfg.num_codebooks:
+        # (B,S,K) labels; per-codebook heads
+        losses = []
+        for k in range(cfg.num_codebooks):
+            losses.append(
+                chunked_softmax_xent(h, w[k], labels[..., k], cfg.xent_chunk)
+            )
+        lm_loss = jnp.mean(jnp.stack(losses))
+    else:
+        lm_loss = chunked_softmax_xent(h, w, labels, cfg.xent_chunk)
+
+    loss = lm_loss
+    metrics = {"lm_loss": lm_loss}
+    if cfg.arch_type == "moe":
+        loss = loss + cfg.router_aux_weight * aux + cfg.router_z_weight * zl
+        metrics.update({"router_aux": aux, "router_z": zl})
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def model_flops_per_token(cfg: ModelConfig) -> float:
+    """MODEL_FLOPS/token = 6 * N (the roofline's useful-compute term).
+
+    N counts MoE active params only and weight-shared blocks once per
+    invocation (flops_param_count) — 6ND should reflect useful compute,
+    not unique-parameter storage.
+    """
+    return 6.0 * cfg.flops_param_count()
+
+
+# ------------------------------------------------------------------ cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Decode cache for one generation stream set."""
+    kind = core_kind(cfg)
+    cache = {"pos": jnp.zeros((batch,), jnp.int32)}  # per-stream positions
+    if kind in ("dense", "moe"):
+        cache["kv"] = attn_lib.init_kv_cache(cfg, batch, max_len)
+    elif kind == "mamba1":
+        cache["conv"] = jnp.zeros(
+            (cfg.num_layers, batch, cfg.ssm_conv - 1, cfg.d_inner), jnp.float32
+        )
+        cache["ssm"] = jnp.zeros(
+            (cfg.num_layers, batch, cfg.d_inner, cfg.ssm_state), jnp.float32
+        )
+    elif kind == "mamba2":
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+        cache["conv"] = jnp.zeros(
+            (cfg.num_layers, batch, cfg.ssm_conv - 1, conv_dim), jnp.float32
+        )
+        cache["ssm"] = jnp.zeros(
+            (
+                cfg.num_layers,
+                batch,
+                cfg.ssm_heads,
+                cfg.ssm_state,
+                cfg.ssm_head_dim,
+            ),
+            jnp.float32,
+        )
+        if cfg.shared_attn and cfg.attn_every:
+            cache["kv"] = attn_lib.init_kv_cache(
+                cfg, batch, max_len, n_layers=cfg.num_attn_invocations
+            )
+    return cache
+
+
+def cache_axes(cfg: ModelConfig):
+    kind = core_kind(cfg)
+    axes = {"pos": ("batch",)}
+    if kind in ("dense", "moe"):
+        axes["kv"] = attn_lib.kv_cache_axes(cfg)
+    elif kind == "mamba1":
+        axes["conv"] = (None, "batch", None, "dinner")
+        axes["ssm"] = (None, "batch", "dinner", None)
+    elif kind == "mamba2":
+        axes["conv"] = (None, "batch", None, "dinner")
+        axes["ssm"] = (None, "batch", None, None, None)
+        if cfg.shared_attn and cfg.attn_every:
+            axes["kv"] = attn_lib.kv_cache_axes(cfg)
+    return axes
+
+
+# ------------------------------------------------------------------ decode
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    """One-token decode. tokens: (B,1) int (audio: (B,1,K)).
+
+    Returns (logits, new_cache). logits: (B,1,V) (audio: (B,1,K,V)).
+    """
+    kind = core_kind(cfg)
+    pos = cache["pos"]
+    if cfg.arch_type == "audio":
+        embs = params["embed"]["embedding"]
+        h = _audio_embed(embs, tokens)
+    else:
+        h = embed(params["embed"], tokens)
+    h = with_logical_constraint(h, ("batch", None, "embed"))
+    shared = params.get("shared_attn")
+    new_cache = dict(cache)
+
+    if kind in ("dense", "moe"):
+        def body(h, xs):
+            layer_params, kc, vc = xs
+            y, upd = attn_lib.attention_decode(
+                layer_params["attn"],
+                rmsnorm(layer_params["norm1"], h),
+                {"k": kc, "v": vc},
+                pos,
+                cfg,
+            )
+            h = h + y
+            if kind == "moe":
+                y2, _, _ = moe_lib.moe_ffn(
+                    layer_params["moe"], rmsnorm(layer_params["norm2"], h), cfg
+                )
+            else:
+                y2 = mlp(layer_params["mlp"], rmsnorm(layer_params["norm2"], h))
+            h = h + y2
+            return h, (upd["k"], upd["v"])
+
+        h, (k_new, v_new) = jax.lax.scan(
+            body, h, (params["layers"], cache["kv"]["k"], cache["kv"]["v"])
+        )
+        new_cache["kv"] = {"k": k_new, "v": v_new}
+    else:
+        dec = ssm_lib.mamba1_decode if kind == "mamba1" else ssm_lib.mamba2_decode
+        n_inv = cfg.num_attn_invocations if (shared is not None and cfg.attn_every) else 0
+
+        def body(carry, xs):
+            h, kv = carry
+            layer_params, conv, ssm_state, idx = xs
+            y, (conv_new, ssm_new) = dec(
+                layer_params["mamba"], rmsnorm(layer_params["norm"], h), conv, ssm_state, cfg
+            )
+            h = h + y
+            if n_inv:
+                def run_shared(args):
+                    h, kv = args
+                    inv = jnp.minimum((idx + 1) // cfg.attn_every - 1, n_inv - 1)
+                    layer_kv = {
+                        "k": kv["k"][inv],
+                        "v": kv["v"][inv],
+                    }
+                    y, upd = attn_lib.attention_decode(
+                        shared["attn"], rmsnorm(shared["norm1"], h), layer_kv, pos, cfg
+                    )
+                    hh = h + y
+                    hh = hh + mlp(shared["mlp"], rmsnorm(shared["norm2"], hh))
+                    kv = {
+                        "k": kv["k"].at[inv].set(upd["k"]),
+                        "v": kv["v"].at[inv].set(upd["v"]),
+                    }
+                    return hh, kv
+
+                h, kv = jax.lax.cond(
+                    (idx + 1) % cfg.attn_every == 0,
+                    run_shared,
+                    lambda args: args,
+                    (h, kv),
+                )
+            return (h, kv), (conv_new, ssm_new)
+
+        kv0 = cache.get("kv", {"k": jnp.zeros((1,)), "v": jnp.zeros((1,))})
+        (h, kv), (conv_new, ssm_new) = jax.lax.scan(
+            body,
+            (h, kv0),
+            (params["layers"], cache["conv"], cache["ssm"], jnp.arange(cfg.num_layers)),
+        )
+        new_cache["conv"] = conv_new
+        new_cache["ssm"] = ssm_new
+        if "kv" in cache:
+            new_cache["kv"] = kv
+
+    h = rmsnorm(params["final_norm"], h)
+    w = _unembed_weight(params, cfg)
+    if cfg.num_codebooks:
+        logits = jnp.einsum("bsd,kdv->bskv", h, w)
+    else:
+        logits = h @ w
+    new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+# ----------------------------------------------------------------- prefill
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: Optional[int] = None):
+    """Process a full prompt, returning (last-position logits, decode cache).
+
+    For attention archs this runs the training-style forward but additionally
+    materialises per-layer K/V into a fresh cache; for SSM archs it returns
+    the final recurrent states. `max_len` sizes the cache for subsequent
+    decode_steps (defaults to the prompt length).
+    """
+    kind = core_kind(cfg)
+    h, _ = _embed_tokens(params, batch, cfg)
+    h = with_logical_constraint(h, ("batch", None, "embed"))
+    B, S = h.shape[0], h.shape[1]
+    positions = jnp.arange(S)
+    shared = params.get("shared_attn")
+
+    cache = init_cache(cfg, B, max_len or S)
+
+    if kind in ("dense", "moe"):
+        C = cache["kv"]["k"].shape[2]
+
+        def body(h, xs):
+            layer_params, idx = xs
+            xn = rmsnorm(layer_params["norm1"], h)
+            q, k, v = attn_lib._qkv(layer_params["attn"], xn, positions, cfg)
+            n_rep = cfg.num_heads // cfg.num_kv_heads
+            out = attn_lib.chunked_causal_attention(
+                q,
+                attn_lib._expand_kv(k, n_rep),
+                attn_lib._expand_kv(v, n_rep),
+                cfg.attn_window,
+                cfg.attn_chunk,
+                causal_skip=cfg.attn_causal_skip,
+            )
+            y = jnp.einsum("bshk,hkd->bsd", out, layer_params["attn"]["wo"])
+            h = h + y
+            if kind == "moe":
+                y2, _, _ = moe_lib.moe_ffn(
+                    layer_params["moe"], rmsnorm(layer_params["norm2"], h), cfg
+                )
+            else:
+                y2 = mlp(layer_params["mlp"], rmsnorm(layer_params["norm2"], h))
+            h = h + y2
+            k_keep = attn_lib.place_kv_in_cache(k, C).astype(cache["kv"]["k"].dtype)
+            v_keep = attn_lib.place_kv_in_cache(v, C).astype(cache["kv"]["v"].dtype)
+            return h, (k_keep, v_keep)
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        h, (k_all, v_all) = jax.lax.scan(
+            body_fn, h, (params["layers"], jnp.arange(cfg.num_layers))
+        )
+        cache["kv"] = {"k": k_all, "v": v_all}
+    else:
+        n_inv = cfg.num_attn_invocations if (shared is not None and cfg.attn_every) else 0
+        if n_inv:
+            C = cache["kv"]["k"].shape[2]
+
+        def body(carry, xs):
+            h, kv = carry
+            layer_params, idx = xs
+            fwd = ssm_lib.mamba1_forward if kind == "mamba1" else ssm_lib.mamba2_forward
+            y, (conv_s, ssm_s) = fwd(
+                layer_params["mamba"], rmsnorm(layer_params["norm"], h), cfg
+            )
+            h = h + y
+            if n_inv:
+                def run_shared(args):
+                    h, kv = args
+                    inv = jnp.minimum((idx + 1) // cfg.attn_every - 1, n_inv - 1)
+                    xn = rmsnorm(shared["norm1"], h)
+                    q, k, v = attn_lib._qkv(shared["attn"], xn, positions, cfg)
+                    n_rep = cfg.num_heads // cfg.num_kv_heads
+                    out = attn_lib.chunked_causal_attention(
+                        q,
+                        attn_lib._expand_kv(k, n_rep),
+                        attn_lib._expand_kv(v, n_rep),
+                        cfg.attn_window,
+                        cfg.attn_chunk,
+                        causal_skip=cfg.attn_causal_skip,
+                    )
+                    y = jnp.einsum("bshk,hkd->bsd", out, shared["attn"]["wo"])
+                    hh = h + y
+                    hh = hh + mlp(shared["mlp"], rmsnorm(shared["norm2"], hh))
+                    kv = {
+                        "k": kv["k"].at[inv].set(
+                            attn_lib.place_kv_in_cache(k, C).astype(kv["k"].dtype)
+                        ),
+                        "v": kv["v"].at[inv].set(
+                            attn_lib.place_kv_in_cache(v, C).astype(kv["v"].dtype)
+                        ),
+                    }
+                    return hh, kv
+
+                h, kv = jax.lax.cond(
+                    (idx + 1) % cfg.attn_every == 0,
+                    run_shared,
+                    lambda args: args,
+                    (h, kv),
+                )
+            return (h, kv), (conv_s, ssm_s)
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        kv0 = cache.get("kv", {"k": jnp.zeros((1,)), "v": jnp.zeros((1,))})
+        (h, kv), (conv_all, ssm_all) = jax.lax.scan(
+            body_fn, (h, kv0), (params["layers"], jnp.arange(cfg.num_layers))
+        )
+        cache["conv"] = conv_all
+        cache["ssm"] = ssm_all
+        if "kv" in cache:
+            cache["kv"] = kv
+
+    h = rmsnorm(params["final_norm"], h)
+    last = h[:, -1:]
+    w = _unembed_weight(params, cfg)
+    if cfg.num_codebooks:
+        logits = jnp.einsum("bsd,kdv->bskv", last, w)
+    else:
+        logits = last @ w
+    cache["pos"] = jnp.full((B,), S, jnp.int32)
+    return logits, cache

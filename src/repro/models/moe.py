@@ -1,0 +1,126 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based dispatch.
+
+GShard/Switch-style einsum dispatch: tokens are processed in groups of
+`cfg.moe_group_size`; each group builds a (g, E, C) dispatch tensor where
+C = ceil(g * top_k / E * capacity_factor). Experts are sharded over the
+"model" mesh axis (expert parallelism); groups are sharded over the data
+axes, so the dispatch einsums induce all-to-all-like resharding between the
+token-sharded and expert-sharded layouts — exactly the communication pattern
+the roofline's collective term tracks.
+
+Aux losses: load-balance (Switch) + router z-loss, returned per call and
+averaged by the caller.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import with_logical_constraint
+from repro.models.layers import _trunc_normal
+
+
+def init_moe(key, cfg):
+    d, ff, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(ff)
+    dtype = cfg.activation_dtype
+    p = {
+        "router": _trunc_normal(k1, (d, E), s_in, jnp.float32),
+        "w_gate": _trunc_normal(k2, (E, d, ff), s_in, dtype),
+        "w_up": _trunc_normal(k3, (E, d, ff), s_in, dtype),
+        "w_down": _trunc_normal(k4, (E, ff, d), s_out, dtype),
+    }
+    a = {
+        "router": ("embed", None),
+        "w_gate": ("expert", "embed", "expert_ffn"),
+        "w_up": ("expert", "embed", "expert_ffn"),
+        "w_down": ("expert", "expert_ffn", "embed"),
+    }
+    return p, a
+
+
+def expert_capacity(group_size: int, num_experts: int, top_k: int, factor: float) -> int:
+    return max(1, int(math.ceil(group_size * top_k / num_experts * factor)))
+
+
+def top_k_routing(router_logits, top_k: int, capacity: int):
+    """Build dispatch/combine tensors.
+
+    router_logits: (G, g, E) fp32.
+    Returns:
+      dispatch: (G, g, E, C) bool — token->slot assignment
+      combine:  (G, g, E, C) f32  — gate-weighted dispatch
+      aux_loss, z_loss: scalars
+    """
+    G, g, E = router_logits.shape
+    probs = jax.nn.softmax(router_logits, axis=-1)  # (G,g,E)
+
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)  # (G,g,k)
+    # renormalise selected gates (standard for top-k>1 routing)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # Position of each (token, choice) in its expert's buffer. Priority:
+    # choice rank first (all 1st choices beat 2nd choices), then token order.
+    dispatch = jnp.zeros((G, g, E, capacity), jnp.bool_)
+    combine = jnp.zeros((G, g, E, capacity), jnp.float32)
+    counts = jnp.zeros((G, E), jnp.int32)
+    for k in range(top_k):
+        mask_k = jax.nn.one_hot(gate_idx[..., k], E, dtype=jnp.int32)  # (G,g,E)
+        pos_in_expert = jnp.cumsum(mask_k, axis=1) - 1 + counts[:, None, :]
+        counts = counts + jnp.sum(mask_k, axis=1)
+        keep = (pos_in_expert < capacity) & (mask_k > 0)
+        slot_oh = jax.nn.one_hot(
+            jnp.clip(pos_in_expert, 0, capacity - 1), capacity, dtype=jnp.float32
+        )  # (G,g,E,C)
+        sel = keep[..., None] * slot_oh
+        dispatch = dispatch | (sel > 0)
+        combine = combine + sel * gate_vals[..., k][..., None, None]
+
+    # Switch load-balance loss: E * sum_e (frac_tokens_e * mean_prob_e)
+    frac = jnp.mean(
+        jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32), axis=(0, 1)
+    )
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux_loss = E * jnp.sum(frac * mean_prob)
+    z_loss = jnp.mean(jnp.square(jax.scipy.special.logsumexp(router_logits, axis=-1)))
+    return dispatch, combine, aux_loss, z_loss
+
+
+def moe_ffn(params, x, cfg) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,d) -> (y, aux_loss, z_loss)."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    tokens = B * S
+    g = min(cfg.moe_group_size, tokens)
+    pad = (-tokens) % g  # pad ragged tails; padded rows' outputs are dropped
+    G = (tokens + pad) // g
+    C = expert_capacity(g, E, k, cfg.capacity_factor)
+
+    xflat = x.reshape(tokens, d)
+    if pad:
+        xflat = jnp.pad(xflat, ((0, pad), (0, 0)))
+    xg = xflat.reshape(G, g, d)
+    logits = (xg.astype(jnp.float32) @ params["router"]).astype(jnp.float32)
+    dispatch, combine, aux, z = top_k_routing(logits, k, C)
+
+    dtype = x.dtype
+    # dispatch tokens to expert buffers: (G,E,C,d)
+    expert_in = jnp.einsum("gtd,gtec->gecd", xg, dispatch.astype(dtype))
+    expert_in = with_logical_constraint(expert_in, ("batch", "expert", None, "embed"))
+    # expert FFN, batched over E
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, params["w_gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", expert_in, params["w_up"])
+    h = with_logical_constraint(h, ("batch", "expert", None, "expert_ffn"))
+    expert_out = jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+    expert_out = with_logical_constraint(expert_out, ("batch", "expert", None, "embed"))
+    # combine back to token order
+    y = jnp.einsum("gecd,gtec->gtd", expert_out, combine.astype(dtype))
+    y = y.reshape(G * g, d)[:tokens]
+    return y.reshape(B, S, d), aux, z

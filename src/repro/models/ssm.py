@@ -1,0 +1,378 @@
+"""Mamba1 selective scan and Mamba2 (SSD) blocks.
+
+TPU adaptation notes (see DESIGN.md §3):
+- The CUDA selective-scan kernel keeps state in registers while streaming the
+  sequence. The jnp training path here uses an *outer scan over chunks* whose
+  carried state (B, d_inner, N) is the only tensor saved for backward; each
+  chunk's inner per-step scan is wrapped in jax.checkpoint and recomputed.
+  The Pallas kernel (repro/kernels/selective_scan) is the TPU-native version:
+  grid over (batch, d_inner blocks), state resident in VMEM.
+- Mamba2 uses the SSD block-decomposition: intra-chunk attention-like matmuls
+  (MXU-friendly) + inter-chunk state recurrence, scanned chunk-by-chunk.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import with_logical_constraint
+from repro.models.layers import _trunc_normal, causal_depthwise_conv1d
+
+
+# ================================================================= Mamba 1
+
+
+def dt_rank(cfg) -> int:
+    return max(1, cfg.d_model // 16)
+
+
+def init_mamba1(key, cfg):
+    d, di, n, K = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    r = dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    dtype = cfg.activation_dtype
+    s = 1.0 / math.sqrt(d)
+    # S4D-real initialisation for A
+    A = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    dt_init_std = r**-0.5
+    p = {
+        "in_proj": _trunc_normal(ks[0], (d, 2 * di), s, dtype),
+        "conv_w": _trunc_normal(ks[1], (di, K), 1.0 / math.sqrt(K), jnp.float32),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": _trunc_normal(ks[2], (di, r + 2 * n), 1.0 / math.sqrt(di), dtype),
+        "dt_proj_w": _trunc_normal(ks[3], (r, di), dt_init_std, jnp.float32),
+        "dt_proj_b": jnp.log(
+            jnp.exp(
+                jnp.exp(
+                    jax.random.uniform(ks[4], (di,))
+                    * (math.log(0.1) - math.log(0.001))
+                    + math.log(0.001)
+                )
+            )
+            - 1.0
+        ),  # inverse-softplus of dt in [1e-3, 1e-1]
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": _trunc_normal(ks[5], (di, d), 1.0 / math.sqrt(di), dtype),
+    }
+    a = {
+        "in_proj": ("embed", "dinner"),
+        "conv_w": ("dinner", None),
+        "conv_b": ("dinner",),
+        "x_proj": ("dinner", None),
+        "dt_proj_w": (None, "dinner"),
+        "dt_proj_b": ("dinner",),
+        "A_log": ("dinner", "state"),
+        "D": ("dinner",),
+        "out_proj": ("dinner", "embed"),
+    }
+    return p, a
+
+
+def selective_scan_chunked(x, delta, A, B, C, D, chunk: int):
+    """Mamba1 recurrence, jnp reference with chunked remat.
+
+    x, delta: (b, S, di); A: (di, N); B, C: (b, S, N); D: (di,)
+    h_t = exp(delta_t A) * h_{t-1} + (delta_t * x_t) outer B_t
+    y_t = (h_t . C_t) + D * x_t
+    Returns (y: (b,S,di), h_final: (b,di,N)).
+    """
+    b, S, di = x.shape
+    N = A.shape[-1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:  # padded steps have delta=0 -> exp(0)=1, zero input: state unchanged
+        zpad2 = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+        x, delta, B, C = zpad2(x), zpad2(delta), zpad2(B), zpad2(C)
+    Sp = S + pad
+    nc = Sp // chunk
+
+    def step(h, inp):
+        x_t, d_t, B_t, C_t = inp  # (b,di),(b,di),(b,N),(b,N)
+        dA = jnp.exp(d_t[..., None] * A)  # (b,di,N)
+        dBx = (d_t * x_t)[..., None] * B_t[:, None, :]  # (b,di,N)
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    @jax.checkpoint
+    def chunk_fn(h, inp_chunk):
+        # cast to fp32 chunk-locally: the full-sequence streams stay in the
+        # model dtype (halves the scan's HBM traffic vs wholesale pre-cast)
+        xs = jax.tree_util.tree_map(
+            lambda t: t.astype(jnp.float32).swapaxes(0, 1), inp_chunk
+        )
+        h, ys = jax.lax.scan(step, h, xs)
+        return h, ys.swapaxes(0, 1)  # (b,chunk,di)
+
+    def outer(h, idx):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, idx * chunk, chunk, axis=1)
+        h, y = chunk_fn(h, (sl(x), sl(delta), sl(B), sl(C)))
+        return h, y
+
+    h0 = jnp.zeros((b, di, N), jnp.float32)
+    h_final, ys = jax.lax.scan(outer, h0, jnp.arange(nc))
+    y = ys.swapaxes(0, 1).reshape(b, Sp, di)[:, :S]
+    y = y + x[:, :S].astype(jnp.float32) * D
+    return y.astype(x.dtype), h_final
+
+
+def mamba1_forward(params, x, cfg, conv_state=None, ssm_state=None):
+    """Full-sequence (train/prefill) mamba1 block. x: (B,S,d).
+
+    Returns (y, (conv_state, ssm_state)) — states are the final ones, used
+    as the decode cache after prefill.
+    """
+    B_, S, d = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    r = dt_rank(cfg)
+
+    xz = x @ params["in_proj"]  # (B,S,2di)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = with_logical_constraint(xs, ("batch", None, "dinner"))
+
+    # conv in the model dtype (bf16): halves the conv's HBM traffic; the
+    # bias add upcasts to fp32 before the activation
+    conv_out = causal_depthwise_conv1d(
+        xs, params["conv_w"].astype(xs.dtype)
+    ).astype(jnp.float32) + params["conv_b"]
+    new_conv_state = xs[:, S - (cfg.ssm_conv - 1) :].astype(jnp.float32)
+    xs = jax.nn.silu(conv_out).astype(x.dtype)
+
+    proj = xs @ params["x_proj"]  # (B,S,r+2n)
+    dt_r, Bm, Cm = jnp.split(proj, [r, r + n], axis=-1)
+    delta = jax.nn.softplus(
+        dt_r.astype(jnp.float32) @ params["dt_proj_w"] + params["dt_proj_b"]
+    )
+    A = -jnp.exp(params["A_log"])
+
+    if cfg.use_pallas:
+        # TPU path: VMEM-resident-state Pallas kernel (returns final state)
+        from repro.kernels.selective_scan.ops import selective_scan
+
+        y, h_final = selective_scan(
+            xs, delta, A, Bm, Cm, params["D"], chunk=cfg.ssm_chunk
+        )
+    else:
+        y, h_final = selective_scan_chunked(
+            xs, delta, A, Bm, Cm, params["D"], cfg.ssm_chunk
+        )
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    return with_logical_constraint(out, ("batch", None, "embed")), (
+        new_conv_state,
+        h_final,
+    )
+
+
+def mamba1_decode(params, x, conv_state, ssm_state, cfg):
+    """Single-token decode. x: (B,1,d); conv_state: (B,K-1,di) fp32;
+    ssm_state: (B,di,N) fp32. Returns (y, (conv_state, ssm_state))."""
+    n = cfg.ssm_state
+    r = dt_rank(cfg)
+
+    xz = x @ params["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)  # (B,1,di)
+    conv_out, new_conv_state = causal_depthwise_conv1d(
+        xs.astype(jnp.float32), params["conv_w"], state=conv_state
+    )
+    xs = jax.nn.silu(conv_out + params["conv_b"]).astype(x.dtype)  # (B,1,di)
+
+    proj = xs @ params["x_proj"]
+    dt_r, Bm, Cm = jnp.split(proj, [r, r + n], axis=-1)
+    delta = jax.nn.softplus(
+        dt_r.astype(jnp.float32) @ params["dt_proj_w"] + params["dt_proj_b"]
+    )  # (B,1,di)
+    A = -jnp.exp(params["A_log"])
+
+    x_t = xs[:, 0].astype(jnp.float32)
+    d_t = delta[:, 0]
+    B_t = Bm[:, 0].astype(jnp.float32)
+    C_t = Cm[:, 0].astype(jnp.float32)
+    dA = jnp.exp(d_t[..., None] * A)
+    h = dA * ssm_state + (d_t * x_t)[..., None] * B_t[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, C_t) + params["D"] * x_t
+    y = (y[:, None].astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    return out, (new_conv_state, h)
+
+
+# ================================================================= Mamba 2
+
+
+def init_mamba2(key, cfg):
+    d, di, n, K = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    h = cfg.ssm_heads
+    ks = jax.random.split(key, 4)
+    dtype = cfg.activation_dtype
+    s = 1.0 / math.sqrt(d)
+    conv_dim = di + 2 * n
+    p = {
+        "in_proj": _trunc_normal(ks[0], (d, 2 * di + 2 * n + h), s, dtype),
+        "conv_w": _trunc_normal(ks[1], (conv_dim, K), 1.0 / math.sqrt(K), jnp.float32),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "dt_bias": jnp.log(
+            jnp.exp(
+                jnp.exp(
+                    jax.random.uniform(ks[2], (h,))
+                    * (math.log(0.1) - math.log(0.001))
+                    + math.log(0.001)
+                )
+            )
+            - 1.0
+        ),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[3], (h,), minval=1.0, maxval=16.0)
+        ),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": _trunc_normal(
+            jax.random.fold_in(key, 7), (di, d), 1.0 / math.sqrt(di), dtype
+        ),
+    }
+    a = {
+        "in_proj": ("embed", "dinner"),
+        "conv_w": ("dinner", None),
+        "conv_b": ("dinner",),
+        "dt_bias": (None,),
+        "A_log": (None,),
+        "D": (None,),
+        "norm_scale": ("dinner",),
+        "out_proj": ("dinner", "embed"),
+    }
+    return p, a
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int):
+    """Mamba2 SSD, scanning chunk-by-chunk.
+
+    x: (b,S,h,p); dt: (b,S,h) (post-softplus); A: (h,) negative;
+    B, C: (b,S,n); D: (h,). Returns (y: (b,S,h,p), state: (b,h,n,p)).
+    """
+    b, S, h, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    Sp = S + pad
+    nc = Sp // chunk
+
+    if pad:  # dt=0 padding: decay exp(0)=1, zero input — state unchanged
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+
+    @jax.checkpoint
+    def chunk_fn(state, args):
+        # chunk-local fp32 casting (see selective_scan_chunked)
+        xc, dtc, Bc, Cc = (t.astype(jnp.float32) for t in args)
+        a = dtc * A  # (b,l,h)  negative
+        cum = jnp.cumsum(a, axis=1)  # (b,l,h)
+        # intra-chunk: M[i,j] = C_i.B_j * exp(cum_i - cum_j) for j<=i
+        scores = jnp.einsum("bin,bjn->bij", Cc, Bc)  # (b,l,l)
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (b,i,j,h)
+        li = jnp.arange(xc.shape[1])
+        causal = (li[:, None] >= li[None, :]).astype(jnp.float32)
+        M = scores[..., None] * decay * causal[None, :, :, None]  # (b,i,j,h)
+        xdt = xc * dtc[..., None]  # (b,l,h,p)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", M, xdt)
+        # inter-chunk: contribution of carried state
+        decay_from_start = jnp.exp(cum)  # (b,l,h)
+        y_inter = jnp.einsum(
+            "bin,bhnp,bih->bihp", Cc, state, decay_from_start
+        )
+        # new state
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)  # (b,l,h)
+        state_contrib = jnp.einsum(
+            "bjn,bjhp,bjh->bhnp", Bc, xdt, decay_to_end
+        )
+        new_state = jnp.exp(cum[:, -1])[:, :, None, None] * state + state_contrib
+        y = y_intra + y_inter + D[None, None, :, None] * xc
+        return new_state, y
+
+    def outer(state, idx):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, idx * chunk, chunk, axis=1)
+        return chunk_fn(state, (sl(x), sl(dt), sl(B), sl(C)))
+
+    state0 = jnp.zeros((b, h, n, p), jnp.float32)
+    state, ys = jax.lax.scan(outer, state0, jnp.arange(nc))
+    y = ys.swapaxes(0, 1).reshape(b, Sp, h, p)[:, :S]
+    return y.astype(x.dtype), state
+
+
+def _rmsnorm_gated(x, z, scale, eps=1e-6):
+    x = x * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def _split_mamba2_proj(proj, cfg):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xBC = proj[..., di : di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n :]
+    return z, xBC, dt
+
+
+def mamba2_forward(params, x, cfg):
+    """Full-sequence mamba2 block. x: (B,S,d) -> (y, (conv_state, ssm_state))."""
+    B_, S, d = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    p_dim = cfg.ssm_head_dim
+
+    proj = x @ params["in_proj"]
+    z, xBC, dt = _split_mamba2_proj(proj, cfg)
+    xBC = with_logical_constraint(xBC, ("batch", None, "dinner"))
+
+    conv_out = causal_depthwise_conv1d(
+        xBC, params["conv_w"].astype(xBC.dtype)
+    ).astype(jnp.float32) + params["conv_b"]
+    new_conv_state = xBC[:, S - (cfg.ssm_conv - 1) :].astype(jnp.float32)
+    xBC = jax.nn.silu(conv_out).astype(x.dtype)
+
+    xs = xBC[..., :di].reshape(B_, S, h, p_dim)
+    Bm = xBC[..., di : di + n]
+    Cm = xBC[..., di + n :]
+    delta = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    y, state = ssd_chunked(xs, delta, A, Bm, Cm, params["D"], cfg.ssm_chunk)
+    y = y.reshape(B_, S, di)
+    y = _rmsnorm_gated(y, z, params["norm_scale"])
+    out = y @ params["out_proj"]
+    return with_logical_constraint(out, ("batch", None, "embed")), (
+        new_conv_state,
+        state,
+    )
+
+
+def mamba2_decode(params, x, conv_state, ssm_state, cfg):
+    """Single-token mamba2 decode. ssm_state: (B,h,n,p) fp32."""
+    B_ = x.shape[0]
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    p_dim = cfg.ssm_head_dim
+
+    proj = x @ params["in_proj"]
+    z, xBC, dt = _split_mamba2_proj(proj, cfg)
+    conv_out, new_conv_state = causal_depthwise_conv1d(
+        xBC.astype(jnp.float32), params["conv_w"], state=conv_state
+    )
+    xBC = jax.nn.silu(conv_out + params["conv_b"]).astype(x.dtype)  # (B,1,·)
+
+    xs = xBC[..., :di].reshape(B_, h, p_dim)
+    Bm = xBC[:, 0, di : di + n].astype(jnp.float32)
+    Cm = xBC[:, 0, di + n :].astype(jnp.float32)
+    delta = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,h)
+    A = -jnp.exp(params["A_log"])
+
+    dA = jnp.exp(delta * A)  # (B,h)
+    xdt = xs.astype(jnp.float32) * delta[..., None]  # (B,h,p)
+    new_ssm = dA[..., None, None] * ssm_state + jnp.einsum("bn,bhp->bhnp", Bm, xdt)
+    y = jnp.einsum("bn,bhnp->bhp", Cm, new_ssm) + params["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B_, 1, di).astype(x.dtype)
+    y = _rmsnorm_gated(y, z, params["norm_scale"])
+    out = y @ params["out_proj"]
+    return out, (new_conv_state, new_ssm)

@@ -1,0 +1,34 @@
+"""Minimal functional neural-network substrate (no flax available offline).
+
+Every layer is a dataclass with two pure methods:
+
+  init(key) -> params        (a nested dict pytree of jnp arrays)
+  apply(params, *args)       (pure forward function)
+
+and one metadata method:
+
+  axes() -> pytree matching init's output whose leaves are tuples of
+  *logical axis names* (or None), consumed by repro.distributed.sharding
+  to produce NamedShardings.
+"""
+from repro.nn.layers import (
+    Dense,
+    Embed,
+    RMSNorm,
+    LayerNorm,
+    MLP,
+    GRUCell,
+    Sequential,
+)
+from repro.nn import initializers
+
+__all__ = [
+    "Dense",
+    "Embed",
+    "RMSNorm",
+    "LayerNorm",
+    "MLP",
+    "GRUCell",
+    "Sequential",
+    "initializers",
+]

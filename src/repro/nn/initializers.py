@@ -1,0 +1,64 @@
+"""Weight initializers (functional, keyed)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def zeros(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.ones(shape, dtype)
+
+
+def normal(stddev: float = 1.0):
+    def init(key, shape, dtype=jnp.float32):
+        return (jax.random.normal(key, shape) * stddev).astype(dtype)
+
+    return init
+
+
+def truncated_normal(stddev: float = 1.0):
+    def init(key, shape, dtype=jnp.float32):
+        return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * stddev).astype(
+            dtype
+        )
+
+    return init
+
+
+def lecun_normal(in_axis: int = -2):
+    """Fan-in scaled truncated normal (default for matmul weights)."""
+
+    def init(key, shape, dtype=jnp.float32):
+        fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+        stddev = 1.0 / math.sqrt(fan_in)
+        return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * stddev).astype(
+            dtype
+        )
+
+    return init
+
+
+def orthogonal(scale: float = 1.0):
+    def init(key, shape, dtype=jnp.float32):
+        if len(shape) < 2:
+            raise ValueError("orthogonal init needs >=2D shape")
+        n_rows = shape[-2]
+        n_cols = shape[-1]
+        matrix_shape = (max(n_rows, n_cols), min(n_rows, n_cols))
+        a = jax.random.normal(key, matrix_shape, jnp.float32)
+        q, r = jnp.linalg.qr(a)
+        q = q * jnp.sign(jnp.diagonal(r))
+        if n_rows < n_cols:
+            q = q.T
+        q = jnp.broadcast_to(q, shape)
+        return (scale * q).astype(dtype)
+
+    return init

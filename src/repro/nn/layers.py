@@ -1,0 +1,192 @@
+"""Core layers for the MARL networks (MLPs, GRUs, Q-nets).
+
+The large-model layers (attention, MoE, SSM) live in repro.models and are
+written as explicit init/apply function pairs for full control over sharding
+and remat; these dataclass layers are the convenience substrate used by the
+MARL systems, which run at laptop scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import initializers
+
+
+@dataclasses.dataclass(frozen=True)
+class Dense:
+    in_dim: int
+    out_dim: int
+    use_bias: bool = True
+    w_init: Callable = dataclasses.field(default_factory=initializers.lecun_normal)
+    dtype: jnp.dtype = jnp.float32
+    logical_axes: tuple = (None, None)
+
+    def init(self, key):
+        wkey, _ = jax.random.split(key)
+        params = {"w": self.w_init(wkey, (self.in_dim, self.out_dim), self.dtype)}
+        if self.use_bias:
+            params["b"] = jnp.zeros((self.out_dim,), self.dtype)
+        return params
+
+    def apply(self, params, x):
+        y = x @ params["w"]
+        if self.use_bias:
+            y = y + params["b"]
+        return y
+
+    def axes(self):
+        out = {"w": self.logical_axes}
+        if self.use_bias:
+            out["b"] = (self.logical_axes[1],)
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Embed:
+    vocab: int
+    dim: int
+    dtype: jnp.dtype = jnp.float32
+    logical_axes: tuple = (None, None)
+
+    def init(self, key):
+        return {"embedding": initializers.normal(1.0)(key, (self.vocab, self.dim), self.dtype)}
+
+    def apply(self, params, ids):
+        return jnp.take(params["embedding"], ids, axis=0)
+
+    def attend(self, params, x):
+        """Tied-output logits."""
+        return x @ params["embedding"].T
+
+    def axes(self):
+        return {"embedding": self.logical_axes}
+
+
+@dataclasses.dataclass(frozen=True)
+class RMSNorm:
+    dim: int
+    eps: float = 1e-6
+
+    def init(self, key):
+        del key
+        return {"scale": jnp.ones((self.dim,), jnp.float32)}
+
+    def apply(self, params, x):
+        var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(var + self.eps)
+        return (y * params["scale"]).astype(x.dtype)
+
+    def axes(self):
+        return {"scale": (None,)}
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerNorm:
+    dim: int
+    eps: float = 1e-5
+
+    def init(self, key):
+        del key
+        return {
+            "scale": jnp.ones((self.dim,), jnp.float32),
+            "bias": jnp.zeros((self.dim,), jnp.float32),
+        }
+
+    def apply(self, params, x):
+        x32 = x.astype(jnp.float32)
+        mean = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mean) * jax.lax.rsqrt(var + self.eps)
+        return (y * params["scale"] + params["bias"]).astype(x.dtype)
+
+    def axes(self):
+        return {"scale": (None,), "bias": (None,)}
+
+
+@dataclasses.dataclass(frozen=True)
+class MLP:
+    """Plain multi-layer perceptron used by MARL policy/critic networks."""
+
+    sizes: Sequence[int]  # [in, hidden..., out]
+    activation: Callable = jax.nn.relu
+    activate_final: bool = False
+    w_init: Callable = dataclasses.field(default_factory=initializers.orthogonal)
+
+    def _layers(self):
+        return [
+            Dense(self.sizes[i], self.sizes[i + 1], w_init=self.w_init)
+            for i in range(len(self.sizes) - 1)
+        ]
+
+    def init(self, key):
+        layers = self._layers()
+        keys = jax.random.split(key, len(layers))
+        return {f"dense_{i}": l.init(k) for i, (l, k) in enumerate(zip(layers, keys))}
+
+    def apply(self, params, x):
+        layers = self._layers()
+        for i, layer in enumerate(layers):
+            x = layer.apply(params[f"dense_{i}"], x)
+            if i < len(layers) - 1 or self.activate_final:
+                x = self.activation(x)
+        return x
+
+    def axes(self):
+        return {f"dense_{i}": l.axes() for i, l in enumerate(self._layers())}
+
+
+@dataclasses.dataclass(frozen=True)
+class GRUCell:
+    """Minimal GRU cell for recurrent executors (R2D2-style MADQN / DIAL)."""
+
+    in_dim: int
+    hidden_dim: int
+
+    def init(self, key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        h = self.hidden_dim
+        lecun = initializers.lecun_normal()
+        return {
+            "wi": lecun(k1, (self.in_dim, 3 * h)),
+            "wh": initializers.orthogonal()(k2, (h, 3 * h)),
+            "bi": jnp.zeros((3 * h,)),
+            "bh": jnp.zeros((3 * h,)),
+        }
+
+    def apply(self, params, h, x):
+        """h: (..., hidden), x: (..., in) -> new h."""
+        gates_x = x @ params["wi"] + params["bi"]
+        gates_h = h @ params["wh"] + params["bh"]
+        xr, xz, xn = jnp.split(gates_x, 3, axis=-1)
+        hr, hz, hn = jnp.split(gates_h, 3, axis=-1)
+        r = jax.nn.sigmoid(xr + hr)
+        z = jax.nn.sigmoid(xz + hz)
+        n = jnp.tanh(xn + r * hn)
+        return (1.0 - z) * n + z * h
+
+    def initial_state(self, batch_shape=()):
+        return jnp.zeros((*batch_shape, self.hidden_dim))
+
+    def axes(self):
+        return {"wi": (None, None), "wh": (None, None), "bi": (None,), "bh": (None,)}
+
+
+@dataclasses.dataclass(frozen=True)
+class Sequential:
+    layers: Sequence
+
+    def init(self, key):
+        keys = jax.random.split(key, len(self.layers))
+        return {f"layer_{i}": l.init(k) for i, (l, k) in enumerate(zip(self.layers, keys))}
+
+    def apply(self, params, x):
+        for i, layer in enumerate(self.layers):
+            x = layer.apply(params[f"layer_{i}"], x)
+        return x
+
+    def axes(self):
+        return {f"layer_{i}": l.axes() for i, l in enumerate(self.layers)}

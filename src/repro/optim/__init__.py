@@ -1,0 +1,33 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adamw,
+    adam,
+    sgd,
+    rmsprop,
+    chain,
+    clip_by_global_norm,
+    scale,
+    apply_updates,
+    global_norm,
+)
+from repro.optim.schedules import (
+    constant,
+    linear_warmup_cosine_decay,
+    linear_schedule,
+)
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "adam",
+    "sgd",
+    "rmsprop",
+    "chain",
+    "clip_by_global_norm",
+    "scale",
+    "apply_updates",
+    "global_norm",
+    "constant",
+    "linear_warmup_cosine_decay",
+    "linear_schedule",
+]

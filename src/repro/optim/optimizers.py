@@ -1,0 +1,201 @@
+"""Gradient-transformation optimizers (optax-style, no optax offline).
+
+An Optimizer is a pair of pure functions:
+
+  init(params) -> state
+  update(grads, state, params) -> (updates, new_state)
+
+`apply_updates(params, updates)` adds the updates. All transforms are
+pytree-polymorphic so they work for both the MARL agent networks and the
+sharded LM parameter trees (optimizer state inherits the param shardings
+through GSPMD since it is elementwise over params).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+ScalarOrSchedule = Union[float, Callable]
+
+
+def _lr(lr: ScalarOrSchedule, count):
+    return lr(count) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)) if u is not None else p, params, updates
+    )
+
+
+def scale(factor: float) -> Optimizer:
+    def init(params):
+        del params
+        return ()
+
+    def update(grads, state, params=None):
+        del params
+        return jax.tree_util.tree_map(lambda g: g * factor, grads), state
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> Optimizer:
+    def init(params):
+        del params
+        return ()
+
+    def update(grads, state, params=None):
+        del params
+        norm = global_norm(grads)
+        factor = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+        return jax.tree_util.tree_map(lambda g: g * factor, grads), state
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    count: jnp.ndarray
+    mu: object
+    nu: object
+
+
+def adamw(
+    learning_rate: ScalarOrSchedule,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    mu_dtype=None,
+) -> Optimizer:
+    def init(params):
+        mu = jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=mu_dtype or p.dtype), params
+        )
+        nu = jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params
+        )
+        return AdamState(count=jnp.zeros((), jnp.int32), mu=mu, nu=nu)
+
+    def update(grads, state, params):
+        count = state.count + 1
+        lr = _lr(learning_rate, count)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype), state.mu, grads
+        )
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu,
+            grads,
+        )
+        bc1 = 1 - b1**count.astype(jnp.float32)
+        bc2 = 1 - b2**count.astype(jnp.float32)
+
+        def upd(m, v, p):
+            mhat = m.astype(jnp.float32) / bc1
+            vhat = v / bc2
+            step = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype)
+
+        updates = jax.tree_util.tree_map(upd, mu, nu, params)
+        return updates, AdamState(count=count, mu=mu, nu=nu)
+
+    return Optimizer(init, update)
+
+
+def adam(learning_rate: ScalarOrSchedule, **kw) -> Optimizer:
+    return adamw(learning_rate, weight_decay=0.0, **kw)
+
+
+class SgdState(NamedTuple):
+    count: jnp.ndarray
+    momentum: object
+
+
+def sgd(learning_rate: ScalarOrSchedule, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        mom = (
+            jax.tree_util.tree_map(jnp.zeros_like, params) if momentum else ()
+        )
+        return SgdState(count=jnp.zeros((), jnp.int32), momentum=mom)
+
+    def update(grads, state, params=None):
+        del params
+        count = state.count + 1
+        lr = _lr(learning_rate, count)
+        if momentum:
+            mom = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g, state.momentum, grads
+            )
+            updates = jax.tree_util.tree_map(lambda m: -lr * m, mom)
+            return updates, SgdState(count, mom)
+        updates = jax.tree_util.tree_map(lambda g: -lr * g, grads)
+        return updates, SgdState(count, ())
+
+    return Optimizer(init, update)
+
+
+class RmspropState(NamedTuple):
+    count: jnp.ndarray
+    nu: object
+
+
+def rmsprop(
+    learning_rate: ScalarOrSchedule, decay: float = 0.9, eps: float = 1e-8
+) -> Optimizer:
+    def init(params):
+        nu = jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params
+        )
+        return RmspropState(count=jnp.zeros((), jnp.int32), nu=nu)
+
+    def update(grads, state, params=None):
+        del params
+        count = state.count + 1
+        lr = _lr(learning_rate, count)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: decay * v + (1 - decay) * jnp.square(g.astype(jnp.float32)),
+            state.nu,
+            grads,
+        )
+        updates = jax.tree_util.tree_map(
+            lambda g, v: (-lr * g.astype(jnp.float32) / (jnp.sqrt(v) + eps)).astype(
+                g.dtype
+            ),
+            grads,
+            nu,
+        )
+        return updates, RmspropState(count, nu)
+
+    return Optimizer(init, update)
+
+
+def chain(*transforms: Sequence[Optimizer]) -> Optimizer:
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return Optimizer(init, update)

@@ -1,0 +1,37 @@
+"""Learning-rate schedules (scalar step -> scalar lr, jax-traceable)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    def schedule(step):
+        return jnp.asarray(value, jnp.float32) + 0.0 * step
+
+    return schedule
+
+
+def linear_schedule(init_value: float, end_value: float, transition_steps: int):
+    def schedule(step):
+        frac = jnp.clip(step / max(transition_steps, 1), 0.0, 1.0)
+        return init_value + frac * (end_value - init_value)
+
+    return schedule
+
+
+def linear_warmup_cosine_decay(
+    peak_value: float,
+    warmup_steps: int,
+    decay_steps: int,
+    end_value: float = 0.0,
+):
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_value * step / jnp.maximum(warmup_steps, 1)
+        frac = jnp.clip(
+            (step - warmup_steps) / jnp.maximum(decay_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = end_value + 0.5 * (peak_value - end_value) * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return schedule

@@ -1,0 +1,108 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+memory term     = HLO_bytes / (chips * HBM_bw)
+collective term = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes / collective_bytes are *global* figures: per-device
+costs derived from the SPMD-partitioned HLO text by repro.roofline.hlo_cost
+(trip-count-aware — see that module: XLA's built-in cost_analysis() counts
+scan bodies once, so it is reported only as a cross-reference), multiplied
+by the chip count. Dividing global cost by (chips * per-chip rate) gives the
+per-step seconds each resource would need at peak — the three roofline
+terms. The largest term is the bottleneck.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.roofline.hlo_cost import Cost, module_cost
+
+# re-exported for compatibility with earlier imports
+from repro.roofline.hlo_cost import COLLECTIVE_KINDS
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    return module_cost(hlo_text).collectives
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: Dict[str, float]
+    model_flops_global: float  # 6 * N_active * tokens (x3 for fwd+bwd)
+    xla_cost_flops: Optional[float] = None  # raw cost_analysis (scan-undercounted)
+    peak_flops: float = PEAK_FLOPS_BF16
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+
+    @property
+    def compute_term(self) -> float:
+        return self.flops_per_device / self.peak_flops
+
+    @property
+    def memory_term(self) -> float:
+        return self.bytes_per_device / self.hbm_bw
+
+    @property
+    def collective_term(self) -> float:
+        return sum(self.collective_bytes_per_device.values()) / self.ici_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_term,
+            "memory": self.memory_term,
+            "collective": self.collective_term,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/attention/capacity waste detector."""
+        hlo_global = self.flops_per_device * self.chips
+        return self.model_flops_global / max(hlo_global, 1.0)
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "chips": self.chips,
+            "compute_s": self.compute_term,
+            "memory_s": self.memory_term,
+            "collective_s": self.collective_term,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops_global,
+            "hlo_flops_global": self.flops_per_device * self.chips,
+            "hlo_bytes_global": self.bytes_per_device * self.chips,
+            "useful_ratio": self.useful_flops_ratio,
+            "collectives_per_device": dict(self.collective_bytes_per_device),
+            "xla_cost_flops_per_device": self.xla_cost_flops,
+        }
+
+
+def roofline_terms(
+    arch: str,
+    shape: str,
+    chips: int,
+    cost_analysis: dict,
+    hlo_text: str,
+    model_flops_global: float,
+) -> RooflineReport:
+    cost: Cost = module_cost(hlo_text)
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        chips=chips,
+        flops_per_device=cost.flops,
+        bytes_per_device=cost.bytes,
+        collective_bytes_per_device=cost.collectives,
+        model_flops_global=model_flops_global,
+        xla_cost_flops=float(cost_analysis.get("flops", 0.0)) if cost_analysis else None,
+    )

@@ -1,0 +1,283 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+XLA's HloCostAnalysis (what compiled.cost_analysis() reports) visits a
+while-loop body ONCE, so a model lowered with lax.scan over layers
+under-reports FLOPs/bytes/collective traffic by the trip count. This module
+re-derives costs from compiled.as_text() with a call-graph walk that scales
+while bodies by their trip counts (XLA annotates jax scans with
+backend_config known_trip_count).
+
+Counted per instruction (per-device, post-SPMD shapes):
+  flops       — dot ops: 2 * prod(result dims) * prod(lhs contracting dims)
+                (dots inside fusions included); convolutions approximated the
+                same way
+  bytes       — operands + result of top-level instructions; a fusion counts
+                as one op (internal traffic ignored), matching XLA's
+                fusion accounting
+  collectives — result bytes per kind (all-gather / all-reduce /
+                reduce-scatter / all-to-all / collective-permute)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# "%region_0.2 (arg: (s32[], f32[2,2])) -> (s32[], f32[2,2]) {"
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\{$")
+# result type = lazily-matched text between "=" and the opcode token right
+# before "(". Tuple types may contain /*index=N*/ comments and layout braces.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s([a-z][a-z0-9\-]*)\((.*)$"
+)
+_ARG_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _parse_dims(type_str: str):
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype in _DTYPE_BYTES:
+            out.append((dtype, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0
+    for dtype, dims in _parse_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return float(total)
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS}
+    )
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for k in COLLECTIVE_KINDS:
+            self.collectives[k] += other.collectives[k]
+        return self
+
+    def scaled(self, m: float) -> "Cost":
+        return Cost(
+            flops=self.flops * m,
+            bytes=self.bytes * m,
+            collectives={k: v * m for k, v in self.collectives.items()},
+        )
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.collectives.values())
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    result_type: str
+    op: str
+    args: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction]
+    symbols: Dict[str, str]  # instr name -> result type
+
+
+def parse_module(hlo_text: str):
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    entry_name = None
+    for raw in hlo_text.splitlines():
+        stripped = raw.strip()
+        if current is None:
+            m = _COMP_HDR_RE.match(stripped)
+            if m and "->" in stripped:
+                current = Computation(m.group(2), [], {})
+                if m.group(1):
+                    entry_name = m.group(2)
+            continue
+        if stripped == "}":
+            comps[current.name] = current
+            current = None
+            continue
+        m = _INSTR_RE.match(stripped)
+        if m:
+            name, rtype, op, rest = m.groups()
+            arg_str = rest.split(")", 1)[0]
+            args = _ARG_RE.findall(arg_str)
+            ins = Instruction(name, rtype, op, args, stripped)
+            current.instructions.append(ins)
+            current.symbols[name] = rtype
+    return comps, entry_name
+
+
+def _dot_flops(instr: Instruction, symbols) -> float:
+    res_elems = 1
+    dims_list = _parse_dims(instr.result_type)
+    if dims_list:
+        for d in dims_list[0][1]:
+            res_elems *= d
+    lhs_type = symbols.get(instr.args[0], "") if instr.args else ""
+    lhs_dims_list = _parse_dims(lhs_type)
+    if not lhs_dims_list:
+        return 0.0
+    lhs_dims = lhs_dims_list[0][1]
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.line)
+    contract = 1
+    if m and m.group(1):
+        for idx in m.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                contract *= lhs_dims[i]
+    return 2.0 * res_elems * contract
+
+
+def _trip_count(instr: Instruction, comps) -> int:
+    m = re.search(r'known_trip_count["\s:{]+n["\s:]+"?(\d+)', instr.line)
+    if m:
+        return int(m.group(1))
+    # fallback: largest constant in the condition computation
+    m = re.search(r"condition=%?([\w.\-]+)", instr.line)
+    if m and m.group(1) in comps:
+        consts = [
+            int(c)
+            for ins in comps[m.group(1)].instructions
+            for c in re.findall(r"constant\((\d+)\)", ins.line)
+        ]
+        if consts:
+            return max(consts)
+    return 1
+
+
+def _called_comps(line: str) -> List[str]:
+    names = []
+    for attr in ("calls", "body", "condition", "to_apply", "branch_computations"):
+        m = re.search(attr + r"=\{?([%\w.\-, ]+)\}?", line)
+        if m:
+            for tok in m.group(1).split(","):
+                tok = tok.strip().lstrip("%")
+                if tok:
+                    names.append(tok)
+    return names
+
+
+def _nested_dot_flops(comp: Computation, comps, seen) -> float:
+    if comp.name in seen:
+        return 0.0
+    seen = seen | {comp.name}
+    total = 0.0
+    for ins in comp.instructions:
+        if ins.op == "dot":
+            total += _dot_flops(ins, comp.symbols)
+        elif ins.op in ("fusion", "call", "custom-call"):
+            for sub in _called_comps(ins.line):
+                if sub in comps:
+                    total += _nested_dot_flops(comps[sub], comps, seen)
+    return total
+
+
+def _instr_bytes(instr: Instruction, symbols) -> float:
+    total = _shape_bytes(instr.result_type)
+    for a in instr.args:
+        total += _shape_bytes(symbols.get(a, ""))
+    return total
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "iota",
+}
+
+
+def computation_cost(comp: Computation, comps, memo) -> Cost:
+    if comp.name in memo:
+        return memo[comp.name]
+    memo[comp.name] = Cost()  # cycle guard
+    cost = Cost()
+    for ins in comp.instructions:
+        if ins.op == "while":
+            trip = _trip_count(ins, comps)
+            for attr, mult in (("body", trip), ("condition", trip)):
+                m = re.search(attr + r"=%?([\w.\-]+)", ins.line)
+                if m and m.group(1) in comps:
+                    cost += computation_cost(comps[m.group(1)], comps, memo).scaled(
+                        mult
+                    )
+            continue
+        if ins.op == "conditional":
+            subs = _called_comps(ins.line)
+            branch_costs = [
+                computation_cost(comps[s], comps, memo) for s in subs if s in comps
+            ]
+            if branch_costs:
+                cost += max(branch_costs, key=lambda c: c.flops + c.bytes)
+            continue
+        if ins.op == "fusion":
+            for s in _called_comps(ins.line):
+                if s in comps:
+                    cost.flops += _nested_dot_flops(comps[s], comps, set())
+                    # collectives never live inside fusions; bytes: fusion
+                    # boundary traffic only
+            cost.bytes += _instr_bytes(ins, comp.symbols)
+            continue
+        if ins.op in ("call", "custom-call"):
+            for s in _called_comps(ins.line):
+                if s in comps:
+                    cost += computation_cost(comps[s], comps, memo)
+            cost.bytes += _instr_bytes(ins, comp.symbols)
+            continue
+        if ins.op == "dot":
+            cost.flops += _dot_flops(ins, comp.symbols)
+            cost.bytes += _instr_bytes(ins, comp.symbols)
+            continue
+        base = None
+        for c in COLLECTIVE_KINDS:
+            if ins.op == c or ins.op.startswith(c + "-"):
+                base = c
+                break
+        if base:
+            if not ins.op.endswith("-done"):  # avoid double-count of async pairs
+                cost.collectives[base] += _shape_bytes(ins.result_type)
+                cost.bytes += _instr_bytes(ins, comp.symbols)
+            continue
+        if ins.op not in _SKIP_BYTES_OPS:
+            cost.bytes += _instr_bytes(ins, comp.symbols)
+    memo[comp.name] = cost
+    return cost
+
+
+def module_cost(hlo_text: str) -> Cost:
+    comps, entry_name = parse_module(hlo_text)
+    if entry_name is None or entry_name not in comps:
+        return Cost()
+    return computation_cost(comps[entry_name], comps, {})

@@ -1,0 +1,134 @@
+"""Continuous-batching serving engine (slot-based, single jitted decode).
+
+A fixed pool of `max_slots` generation slots shares one KV cache; requests
+are admitted into free slots (a per-request prefill writes the prompt into
+the slot's cache region), and one jitted `decode_step` advances *all* live
+slots each tick — slots can be at different depths because the cache keeps
+**per-stream positions** (see attention_decode). Finished slots (EOS or
+max_new_tokens) are freed and refilled from the queue: the continuous-
+batching discipline (vLLM-style, minus paging) on a static-shape JAX
+program.
+
+Simplifications vs a production server (documented, not hidden):
+- prefill runs per admission rather than chunked alongside decode;
+- dead slots still consume decode FLOPs (their outputs are discarded) —
+  fine at these slot counts, paging would fix it at scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    # filled by the engine
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        max_slots: int = 4,
+        prompt_capacity: int = 64,
+        max_new_tokens: int = 64,
+    ):
+        if cfg.arch_type in ("vlm", "audio"):
+            raise NotImplementedError("engine demo covers token-only archs")
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.capacity = prompt_capacity + max_new_tokens
+        self.prompt_capacity = prompt_capacity
+        self.queue: Deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * max_slots
+        self.finished: List[Request] = []
+
+        self._decode = jax.jit(lambda p, c, t: M.decode_step(p, c, t, self.cfg))
+        self._prefill = jax.jit(
+            lambda p, b: M.prefill(p, b, self.cfg, max_len=self.capacity)
+        )
+        self.cache = M.init_cache(cfg, max_slots, self.capacity)
+        self.last_tokens = np.zeros((max_slots, 1), np.int32)
+
+    # ------------------------------------------------------------- admission
+
+    def submit(self, req: Request):
+        assert req.prompt.ndim == 1 and len(req.prompt) <= self.prompt_capacity
+        self.queue.append(req)
+
+    def _merge_slot(self, slot: int, one_cache):
+        """Copy a single-stream cache into pool slot `slot`.
+
+        Cache leaves have the stream dim at index 1 (kv/conv/ssm are stacked
+        (L, B, ...)) except "pos" which is (B,).
+        """
+
+        def merge(pool, one):
+            if pool.ndim == 1:  # pos (B,)
+                return pool.at[slot].set(one[0])
+            return pool.at[:, slot].set(one[:, 0])
+
+        self.cache = jax.tree_util.tree_map(merge, self.cache, one_cache)
+
+    def _admit(self):
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        while free and self.queue:
+            slot = free.pop(0)
+            req = self.queue.popleft()
+            self.slots[slot] = req
+            batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
+            logits, one_cache = self._prefill(self.params, batch)
+            self._merge_slot(slot, one_cache)
+            tok = int(jnp.argmax(logits[0, -1]))
+            req.output.append(tok)
+            self.last_tokens[slot, 0] = tok
+
+    # ----------------------------------------------------------------- step
+
+    def step(self) -> Dict[int, int]:
+        """Admit, decode one token for all live slots, retire finished."""
+        self._admit()
+        live = [i for i, s in enumerate(self.slots) if s is not None]
+        if not live:
+            return {}
+        toks = jnp.asarray(self.last_tokens)
+        logits, self.cache = self._decode(self.params, self.cache, toks)
+        next_tokens = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+
+        emitted = {}
+        for i in live:
+            req = self.slots[i]
+            tok = int(next_tokens[i])
+            req.output.append(tok)
+            emitted[req.uid] = tok
+            self.last_tokens[i, 0] = tok
+            if (req.eos_id is not None and tok == req.eos_id) or len(
+                req.output
+            ) >= req.max_new_tokens:
+                req.done = True
+                self.finished.append(req)
+                self.slots[i] = None
+        return emitted
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
+        for _ in range(max_steps):
+            if not self.queue and all(s is None for s in self.slots):
+                break
+            self.step()
+        return self.finished

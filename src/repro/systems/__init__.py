@@ -1,0 +1,19 @@
+from repro.systems.madqn import make_madqn
+from repro.systems.vdn import make_vdn
+from repro.systems.qmix import make_qmix
+from repro.systems.ippo import make_ippo
+from repro.systems.mappo import make_mappo
+from repro.systems.maddpg import make_maddpg, make_mad4pg
+from repro.systems.dial import make_dial, train_dial
+
+__all__ = [
+    "make_madqn",
+    "make_vdn",
+    "make_qmix",
+    "make_ippo",
+    "make_mappo",
+    "make_maddpg",
+    "make_mad4pg",
+    "make_dial",
+    "train_dial",
+]

@@ -1,0 +1,298 @@
+"""DIAL — Differentiable Inter-Agent Learning (Foerster et al. 2016).
+
+Recurrent Q-agents with a learned 1-bit channel on the switch riddle (the
+paper's Fig. 4 top experiment). Centralised training: the channel is the
+continuous DRU (sigmoid + noise), so TD gradients flow *between agents*
+through the message; decentralised execution thresholds the message to a
+hard bit.
+
+Training is episode-based BPTT: (1) roll out a batch of episodes eps-greedily
+with the current params (no gradients); (2) re-run the recurrent nets over
+the stored episodes differentiably (same actions, messages recomputed with
+gradients) and minimise the TD error of the chosen-action Q's with targets
+from the target network.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.core.modules.communication import BroadcastedCommunication, dru
+from repro.core.types import TrainState
+from repro.envs.api import StepType
+from repro.nn import GRUCell, MLP
+
+
+@dataclasses.dataclass(frozen=True)
+class DialConfig:
+    hidden_dim: int = 64
+    channel_size: int = 1
+    noise_std: float = 0.5
+    learning_rate: float = 5e-4
+    gamma: float = 1.0
+    batch_episodes: int = 32
+    eps_start: float = 1.0
+    eps_end: float = 0.05
+    eps_decay_updates: int = 300
+    target_update_period: int = 20
+    max_grad_norm: float = 10.0
+    use_comm: bool = True  # False -> ablation: recurrent independent MADQN
+    # "dial": differentiable DRU channel (gradients flow between agents)
+    # "rial": discrete message chosen eps-greedily from a message Q-head and
+    #         trained by Q-learning (no cross-agent gradients) — the RIAL
+    #         baseline from Foerster et al. 2016
+    protocol: str = "dial"
+
+
+class DialNets(NamedTuple):
+    encoder: MLP
+    core: GRUCell
+    q_head: MLP
+    msg_head: MLP
+
+
+def make_dial(env, cfg: DialConfig = DialConfig()):
+    spec = env.spec()
+    ids = list(spec.agent_ids)
+    n = len(ids)
+    obs_dim = spec.observations[ids[0]].shape[0]
+    num_actions = spec.actions[ids[0]].num_values
+    comm = BroadcastedCommunication(cfg.channel_size, cfg.noise_std, shared=True)
+    in_dim = obs_dim + (comm.incoming_size(n) if cfg.use_comm else 0)
+
+    rial = cfg.protocol == "rial"
+    msg_out = 2 * cfg.channel_size if rial else cfg.channel_size
+    nets = DialNets(
+        encoder=MLP((in_dim, cfg.hidden_dim), activate_final=True),
+        core=GRUCell(cfg.hidden_dim, cfg.hidden_dim),
+        q_head=MLP((cfg.hidden_dim, cfg.hidden_dim, num_actions)),
+        msg_head=MLP((cfg.hidden_dim, cfg.hidden_dim, msg_out)),
+    )
+    opt = optim.chain(
+        optim.clip_by_global_norm(cfg.max_grad_norm),
+        optim.adamw(cfg.learning_rate),
+    )
+    horizon = env.horizon
+
+    def init_train(key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        params = {
+            "encoder": nets.encoder.init(k1),
+            "core": nets.core.init(k2),
+            "q_head": nets.q_head.init(k3),
+            "msg_head": nets.msg_head.init(k4),
+        }
+        return TrainState(params, params, opt.init(params), jnp.zeros((), jnp.int32))
+
+    def agent_step(params, obs_a, msg_in, h):
+        """One recurrent step for one agent (shared weights)."""
+        x = jnp.concatenate([obs_a, msg_in], axis=-1) if cfg.use_comm else obs_a
+        z = nets.encoder.apply(params["encoder"], x)
+        h = nets.core.apply(params["core"], h, z)
+        q = nets.q_head.apply(params["q_head"], h)
+        m = nets.msg_head.apply(params["msg_head"], h)
+        return q, m, h
+
+    def initial_carry(batch_shape):
+        h = {a: jnp.zeros((*batch_shape, cfg.hidden_dim)) for a in ids}
+        msg = {a: jnp.zeros((*batch_shape, cfg.channel_size)) for a in ids}
+        return {"h": h, "msg": msg}
+
+    def eps_at(steps):
+        frac = jnp.clip(steps / cfg.eps_decay_updates, 0.0, 1.0)
+        return cfg.eps_start + frac * (cfg.eps_end - cfg.eps_start)
+
+    def rollout(params, steps, key, batch: int, training: bool):
+        """Roll a batch of episodes. Returns stacked episode data."""
+        k_env, k_run = jax.random.split(key)
+        env_state, ts = jax.vmap(env.reset)(jax.random.split(k_env, batch))
+        carry0 = initial_carry((batch,))
+
+        def step(c, t):
+            env_state, ts, carry, key, alive = c
+            key, k_eps, k_dru, k_act = jax.random.split(key, 4)
+            incoming = comm.route(carry["msg"]) if cfg.use_comm else None
+            actions, new_h, out_msgs, qs = {}, {}, {}, {}
+            eps = eps_at(steps) if training else 0.0
+            msg_bits = {}
+            for i, a in enumerate(ids):
+                msg_in = incoming[a] if cfg.use_comm else jnp.zeros((batch, 0))
+                q, m, h = agent_step(params, ts.observation[a], msg_in, carry["h"][a])
+                greedy = jnp.argmax(q, axis=-1)
+                ka = jax.random.fold_in(k_act, i)
+                rand = jax.random.randint(ka, greedy.shape, 0, num_actions)
+                explore = jax.random.uniform(ka, greedy.shape) < eps
+                actions[a] = jnp.where(explore, rand, greedy).astype(jnp.int32)
+                if rial:
+                    # RIAL: the message bit is an eps-greedy action from the
+                    # message Q-head (hard bit in training and execution)
+                    qm = m.reshape(batch, cfg.channel_size, 2)
+                    bit_greedy = jnp.argmax(qm, axis=-1)
+                    km = jax.random.fold_in(k_dru, i)
+                    bit_rand = jax.random.randint(km, bit_greedy.shape, 0, 2)
+                    bit_explore = jax.random.uniform(km, bit_greedy.shape) < eps
+                    bit = jnp.where(bit_explore, bit_rand, bit_greedy).astype(
+                        jnp.int32
+                    )
+                    msg_bits[a] = bit
+                    out_msgs[a] = bit.astype(jnp.float32)
+                else:
+                    # DIAL: DRU (continuous in training, hard bit execution)
+                    out_msgs[a] = dru(
+                        m, jax.random.fold_in(k_dru, i), cfg.noise_std, training
+                    )
+                new_h[a] = h
+                qs[a] = q
+            new_env_state, new_ts = jax.vmap(env.step)(env_state, actions)
+            # freeze finished episodes (no reset: fixed-horizon batch)
+            done_now = new_ts.step_type == StepType.LAST
+
+            def keep(new, old):
+                d = alive.reshape(alive.shape + (1,) * (new.ndim - 1))
+                return jnp.where(d, new, old)
+
+            env_state2 = jax.tree_util.tree_map(keep, new_env_state, env_state)
+            ts2 = jax.tree_util.tree_map(keep, new_ts, ts)
+            reward = jnp.mean(jnp.stack(list(new_ts.reward.values())), axis=0)
+            data = dict(
+                obs=ts.observation,
+                actions=actions,
+                reward=reward * alive,
+                alive=alive,
+                discount=new_ts.discount,
+                msgs={a: out_msgs[a] for a in ids},
+                msg_bits=msg_bits if rial else {},
+            )
+            alive2 = alive & ~done_now
+            carry2 = {"h": new_h, "msg": out_msgs}
+            return (env_state2, ts2, carry2, key, alive2), data
+
+        init = (env_state, ts, carry0, k_run, jnp.ones((batch,), bool))
+        (_, _, _, _, _), episode = jax.lax.scan(step, init, jnp.arange(horizon))
+        return episode  # leaves: (T, batch, ...)
+
+    def q_trajectory(params, episode, key, training: bool):
+        """Differentiable re-run over a stored episode.
+
+        DIAL: messages are recomputed with gradients (the channel is part of
+        the computation graph). RIAL: stored hard bits are teacher-forced
+        (no cross-agent gradients); returns message Q-values as well.
+        Returns (qs, msg_qs) — msg_qs is {} for DIAL.
+        """
+        batch = episode["reward"].shape[1]
+        carry0 = initial_carry((batch,))
+
+        def step(c, data_t):
+            carry, key = c
+            key, k_dru = jax.random.split(key)
+            incoming = comm.route(carry["msg"]) if cfg.use_comm else None
+            qs, new_h, out_msgs, msg_qs = {}, {}, {}, {}
+            for i, a in enumerate(ids):
+                msg_in = incoming[a] if cfg.use_comm else jnp.zeros((batch, 0))
+                q, m, h = agent_step(params, data_t["obs"][a], msg_in, carry["h"][a])
+                qs[a] = q
+                new_h[a] = h
+                if rial:
+                    msg_qs[a] = m.reshape(batch, cfg.channel_size, 2)
+                    out_msgs[a] = data_t["msgs"][a]  # teacher-forced bits
+                else:
+                    out_msgs[a] = dru(
+                        m, jax.random.fold_in(k_dru, i), cfg.noise_std, training
+                    )
+            return ({"h": new_h, "msg": out_msgs}, key), (qs, msg_qs)
+
+        (_, _), (qs, msg_qs) = jax.lax.scan(step, (carry0, key), episode)
+        return qs, msg_qs  # per-agent (T, batch, A) / (T, batch, C, 2)
+
+    def loss_fn(params, target_params, episode, key, steps):
+        k1, k2 = jax.random.split(key)
+        qs, msg_qs = q_trajectory(params, episode, k1, training=True)
+        qs_t, msg_qs_t = q_trajectory(target_params, episode, k2, True)
+        qs_target = jax.tree_util.tree_map(jax.lax.stop_gradient, qs_t)
+        msg_qs_target = jax.tree_util.tree_map(jax.lax.stop_gradient, msg_qs_t)
+        total, count = 0.0, 0.0
+        r = episode["reward"]  # (T, B) shared
+        d = episode["discount"]
+        alive = episode["alive"].astype(jnp.float32)
+        for a in ids:
+            q = qs[a]  # (T, B, A)
+            qa = jnp.take_along_axis(q, episode["actions"][a][..., None], -1)[..., 0]
+            q_next_max = jnp.max(qs_target[a][1:], axis=-1)  # (T-1, B)
+            target = r[:-1] + cfg.gamma * d[:-1] * q_next_max
+            target = jnp.concatenate([target, r[-1][None]], axis=0)
+            td = (qa - jax.lax.stop_gradient(target)) * alive
+            total = total + jnp.sum(jnp.square(td))
+            count = count + jnp.sum(alive)
+            if rial:
+                # message-bit Q-learning (RIAL trains the channel by TD)
+                qm = msg_qs[a]  # (T, B, C, 2)
+                bits = episode["msg_bits"][a][..., None]  # (T, B, C, 1)
+                qmb = jnp.take_along_axis(qm, bits, -1)[..., 0]  # (T, B, C)
+                qm_next = jnp.max(msg_qs_target[a][1:], axis=-1)  # (T-1, B, C)
+                tgt = r[:-1, :, None] + cfg.gamma * d[:-1, :, None] * qm_next
+                tgt = jnp.concatenate(
+                    [tgt, jnp.broadcast_to(r[-1][None, :, None], tgt[:1].shape)],
+                    axis=0,
+                )
+                td_m = (qmb - jax.lax.stop_gradient(tgt)) * alive[..., None]
+                total = total + jnp.sum(jnp.square(td_m))
+                count = count + jnp.sum(alive) * cfg.channel_size
+        return total / jnp.maximum(count, 1.0)
+
+    def update(train: TrainState, key):
+        k_roll, k_loss = jax.random.split(key)
+        episode = rollout(
+            train.params, train.steps, k_roll, cfg.batch_episodes, training=True
+        )
+        loss, grads = jax.value_and_grad(loss_fn)(
+            train.params, train.target_params, episode, k_loss, train.steps
+        )
+        updates, opt_state = opt.update(grads, train.opt_state, train.params)
+        params = optim.apply_updates(train.params, updates)
+        steps = train.steps + 1
+        target_params = jax.tree_util.tree_map(
+            lambda t, o: jnp.where(steps % cfg.target_update_period == 0, o, t),
+            train.target_params,
+            params,
+        )
+        mean_ret = jnp.sum(episode["reward"]) / cfg.batch_episodes
+        return (
+            TrainState(params, target_params, opt_state, steps),
+            {"loss": loss, "return": mean_ret},
+        )
+
+    def evaluate(train: TrainState, key, batch: int = 128):
+        episode = rollout(train.params, train.steps, key, batch, training=False)
+        return jnp.sum(episode["reward"]) / batch
+
+    return dict(
+        init_train=init_train,
+        update=update,
+        evaluate=evaluate,
+        rollout=rollout,
+        name=(cfg.protocol if cfg.use_comm else "rec-madqn"),
+    )
+
+
+def train_dial(env, cfg: DialConfig, key, num_updates: int):
+    """Jit-fused DIAL training. Returns (train_state, metrics over updates)."""
+    system = make_dial(env, cfg)
+    key, k_init = jax.random.split(key)
+    train = system["init_train"](k_init)
+
+    @jax.jit
+    def run(train, key):
+        def body(carry, _):
+            train, key = carry
+            key, k = jax.random.split(key)
+            train, metrics = system["update"](train, k)
+            return (train, key), metrics
+
+        return jax.lax.scan(body, (train, key), None, length=num_updates)
+
+    (train, _), metrics = run(train, key)
+    return train, metrics, system

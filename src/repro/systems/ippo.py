@@ -1,0 +1,4 @@
+"""IPPO — independent PPO (decentralised critics)."""
+from repro.systems.onpolicy import PPOConfig, make_ippo
+
+__all__ = ["make_ippo", "PPOConfig"]

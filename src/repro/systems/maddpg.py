@@ -1,0 +1,246 @@
+"""MADDPG (Lowe et al. 2017) and MAD4PG (distributional critic, D4PG-style).
+
+Continuous-control actor-critic with centralised critics: each agent's
+critic sees the global state and *all* agents' actions (the
+CentralisedQValueCritic architecture); execution is decentralised. MAD4PG
+replaces the scalar critic with a C51 categorical critic and a projected
+distributional Bellman target (Barth-Maron et al. 2018).
+
+The `architecture` argument switches between decentralised / centralised /
+networked critics — the paper's Block-4 code change.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.core.architectures import CentralisedQValueCritic
+from repro.core.buffer import (
+    buffer_add,
+    buffer_can_sample,
+    buffer_init,
+    buffer_sample,
+)
+from repro.core.system import System
+from repro.core.types import TrainState, Transition
+from repro.envs.api import EnvSpec
+from repro.nn import MLP
+
+
+@dataclasses.dataclass(frozen=True)
+class MaddpgConfig:
+    hidden_sizes: Sequence[int] = (64, 64)
+    actor_lr: float = 1e-3
+    critic_lr: float = 3e-3
+    gamma: float = 0.95
+    tau: float = 0.01  # polyak
+    buffer_capacity: int = 200_000
+    batch_size: int = 512
+    min_replay: int = 2_000
+    sigma: float = 0.15  # exploration noise
+    max_grad_norm: float = 10.0
+    distributed_axis: Optional[str] = None
+    # distributional (MAD4PG) head
+    distributional: bool = False
+    num_atoms: int = 51
+    v_min: float = -150.0
+    v_max: float = 20.0
+
+
+def make_maddpg(env, cfg: MaddpgConfig = MaddpgConfig(), architecture=None) -> System:
+    spec: EnvSpec = env.spec()
+    ids = list(spec.agent_ids)
+    arch = architecture or CentralisedQValueCritic(agent_order=tuple(ids))
+    act_dims = {a: spec.actions[a].shape[0] for a in ids}
+    obs_dims = {a: spec.observations[a].shape[0] for a in ids}
+    state_dim = spec.state.shape[0]
+
+    actors = {
+        a: MLP((obs_dims[a], *cfg.hidden_sizes, act_dims[a])) for a in ids
+    }
+
+    def critic_in_dim(a):
+        # infer by building a dummy critic input
+        obs = {b: jnp.zeros((obs_dims[b],)) for b in ids}
+        acts = {b: jnp.zeros((act_dims[b],)) for b in ids}
+        gs = jnp.zeros((state_dim,))
+        return arch.critic_input(obs, acts, gs, a).shape[-1]
+
+    out_dim = cfg.num_atoms if cfg.distributional else 1
+    critics = {a: MLP((critic_in_dim(a), *cfg.hidden_sizes, out_dim)) for a in ids}
+    atoms = jnp.linspace(cfg.v_min, cfg.v_max, cfg.num_atoms)
+
+    actor_opt = optim.chain(
+        optim.clip_by_global_norm(cfg.max_grad_norm), optim.adamw(cfg.actor_lr)
+    )
+    critic_opt = optim.chain(
+        optim.clip_by_global_norm(cfg.max_grad_norm), optim.adamw(cfg.critic_lr)
+    )
+
+    def init_train(key):
+        ka, kc = jax.random.split(key)
+        kas = jax.random.split(ka, len(ids))
+        kcs = jax.random.split(kc, len(ids))
+        params = {
+            "actor": {a: actors[a].init(k) for a, k in zip(ids, kas)},
+            "critic": {a: critics[a].init(k) for a, k in zip(ids, kcs)},
+        }
+        opt_state = {
+            "actor": actor_opt.init(params["actor"]),
+            "critic": critic_opt.init(params["critic"]),
+        }
+        return TrainState(params, params, opt_state, jnp.zeros((), jnp.int32))
+
+    def policy(params, agent, obs):
+        return jnp.tanh(actors[agent].apply(params["actor"][agent], obs))
+
+    def critic_value(params, agent, obs, acts, gs):
+        cin = arch.critic_input(obs, acts, gs, agent)
+        out = critics[agent].apply(params["critic"][agent], cin)
+        if cfg.distributional:
+            probs = jax.nn.softmax(out, axis=-1)
+            return jnp.sum(probs * atoms, axis=-1), out
+        return out[..., 0], out
+
+    def select_actions(train, obs, carry, key, training=True):
+        actions = {}
+        for i, a in enumerate(ids):
+            mu = policy(train.params, a, obs[a])
+            if training:
+                noise = (
+                    jax.random.normal(jax.random.fold_in(key, i), mu.shape)
+                    * cfg.sigma
+                )
+                mu = jnp.clip(mu + noise, -1.0, 1.0)
+            actions[a] = mu
+        return actions, carry
+
+    def initial_carry(batch_shape):
+        del batch_shape
+        return ()
+
+    def _project_distribution(target_probs, target_atoms):
+        """C51 projection of (B, A) probs at shifted atoms onto fixed atoms."""
+        dz = (cfg.v_max - cfg.v_min) / (cfg.num_atoms - 1)
+        tz = jnp.clip(target_atoms, cfg.v_min, cfg.v_max)  # (B, A)
+        b = (tz - cfg.v_min) / dz
+        lo = jnp.floor(b).astype(jnp.int32)
+        hi = jnp.ceil(b).astype(jnp.int32)
+        eq = (lo == hi).astype(jnp.float32)
+        w_lo = target_probs * (hi.astype(jnp.float32) - b + eq)
+        w_hi = target_probs * (b - lo.astype(jnp.float32))
+        B = target_probs.shape[0]
+        out = jnp.zeros((B, cfg.num_atoms))
+        bidx = jnp.arange(B)[:, None]
+        out = out.at[bidx, lo].add(w_lo)
+        out = out.at[bidx, hi].add(w_hi)
+        return out
+
+    def critic_loss_fn(cparams, params, target_params, batch: Transition):
+        loss = 0.0
+        p = dict(params, critic=cparams)
+        next_acts = {
+            a: policy(target_params, a, batch.next_obs[a]) for a in ids
+        }
+        for a in ids:
+            q, logits = critic_value(
+                p, a, batch.obs, batch.actions, batch.state
+            )
+            qn, next_logits = critic_value(
+                target_params, a, batch.next_obs, next_acts, batch.next_state
+            )
+            r = batch.rewards[a]
+            if cfg.distributional:
+                target_atoms = (
+                    r[:, None] + cfg.gamma * batch.discount[:, None] * atoms[None]
+                )
+                target_probs = jax.nn.softmax(next_logits, axis=-1)
+                proj = jax.lax.stop_gradient(
+                    _project_distribution(target_probs, target_atoms)
+                )
+                logp = jax.nn.log_softmax(logits, axis=-1)
+                loss = loss + jnp.mean(-jnp.sum(proj * logp, axis=-1))
+            else:
+                target = r + cfg.gamma * batch.discount * qn
+                loss = loss + jnp.mean(
+                    jnp.square(q - jax.lax.stop_gradient(target))
+                )
+        return loss
+
+    def actor_loss_fn(aparams, params, batch: Transition):
+        loss = 0.0
+        p = dict(params, actor=aparams)
+        for a in ids:
+            acts = {b: batch.actions[b] for b in ids}
+            acts[a] = policy(p, a, batch.obs[a])
+            q, _ = critic_value(p, a, batch.obs, acts, batch.state)
+            loss = loss - jnp.mean(q)
+        return loss
+
+    def update(train: TrainState, buffer, key):
+        batch = buffer_sample(buffer, key, cfg.batch_size)
+        closs, cgrads = jax.value_and_grad(critic_loss_fn)(
+            train.params["critic"], train.params, train.target_params, batch
+        )
+        aloss, agrads = jax.value_and_grad(actor_loss_fn)(
+            train.params["actor"], train.params, batch
+        )
+        if cfg.distributed_axis:
+            cgrads = jax.lax.pmean(cgrads, cfg.distributed_axis)
+            agrads = jax.lax.pmean(agrads, cfg.distributed_axis)
+        cupd, c_opt = critic_opt.update(
+            cgrads, train.opt_state["critic"], train.params["critic"]
+        )
+        aupd, a_opt = actor_opt.update(
+            agrads, train.opt_state["actor"], train.params["actor"]
+        )
+        params = {
+            "actor": optim.apply_updates(train.params["actor"], aupd),
+            "critic": optim.apply_updates(train.params["critic"], cupd),
+        }
+        target_params = jax.tree_util.tree_map(
+            lambda t, o: (1 - cfg.tau) * t + cfg.tau * o, train.target_params, params
+        )
+        return (
+            TrainState(
+                params, target_params, {"actor": a_opt, "critic": c_opt},
+                train.steps + 1,
+            ),
+            {"critic_loss": closs, "actor_loss": aloss},
+        )
+
+    def example_transition():
+        obs = {a: jnp.zeros(spec.observations[a].shape) for a in ids}
+        return Transition(
+            obs=obs,
+            actions={a: jnp.zeros((act_dims[a],)) for a in ids},
+            rewards={a: jnp.zeros(()) for a in ids},
+            discount=jnp.zeros(()),
+            next_obs=obs,
+            state=jnp.zeros(spec.state.shape),
+            next_state=jnp.zeros(spec.state.shape),
+            extras={},
+        )
+
+    return System(
+        env=env,
+        spec=spec,
+        init_train=init_train,
+        update=update,
+        select_actions=select_actions,
+        initial_carry=initial_carry,
+        init_buffer=lambda: buffer_init(example_transition(), cfg.buffer_capacity),
+        observe=buffer_add,
+        sample=lambda buf, key: buffer_sample(buf, key, cfg.batch_size),
+        can_sample=lambda buf: buffer_can_sample(buf, cfg.min_replay),
+        name="mad4pg" if cfg.distributional else "maddpg",
+    )
+
+
+def make_mad4pg(env, cfg: MaddpgConfig = MaddpgConfig(), architecture=None) -> System:
+    cfg = dataclasses.replace(cfg, distributional=True)
+    return make_maddpg(env, cfg, architecture)

@@ -1,0 +1,11 @@
+"""MADQN — independent multi-agent DQN (Tampuu et al. 2017).
+
+Optionally stabilised with policy fingerprints (Foerster et al. 2017c) via
+``OffPolicyConfig(fingerprint=True)`` — the paper's
+``stabilising.FingerPrintStabalisation(architecture)`` wrapper.
+"""
+from repro.systems.offpolicy import OffPolicyConfig, make_offpolicy_system
+
+
+def make_madqn(env, cfg: OffPolicyConfig = OffPolicyConfig()):
+    return make_offpolicy_system(env, cfg, mixer=None, name="madqn")

@@ -1,0 +1,4 @@
+"""MAPPO — PPO with centralised critics on the global state (CTDE)."""
+from repro.systems.onpolicy import PPOConfig, make_mappo
+
+__all__ = ["make_mappo", "PPOConfig"]

@@ -1,0 +1,304 @@
+"""On-policy PPO family: IPPO (decentralised critics) / MAPPO (centralised).
+
+The flagship systems of JAX-Mava. Fully-fused Anakin training: each update
+collects a `rollout_len` trajectory from `num_envs` vectorised environments
+inside the same jit as the PPO epochs (GAE, clipped objective, entropy
+bonus). MAPPO's critic conditions on the global environment state
+(CentralisedQValueCritic architecture); IPPO's on each agent's observation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.core.types import TrainState
+from repro.envs.api import EnvSpec, StepType
+from repro.nn import MLP
+
+
+@dataclasses.dataclass(frozen=True)
+class PPOConfig:
+    hidden_sizes: Sequence[int] = (64, 64)
+    learning_rate: float = 3e-4
+    gamma: float = 0.99
+    gae_lambda: float = 0.95
+    clip_eps: float = 0.2
+    value_coef: float = 0.5
+    entropy_coef: float = 0.01
+    epochs: int = 4
+    num_minibatches: int = 4
+    max_grad_norm: float = 0.5
+    rollout_len: int = 128
+    shared_weights: bool = True
+    distributed_axis: str | None = None
+
+
+class PPOBatch(NamedTuple):
+    obs: dict
+    state: jnp.ndarray
+    actions: dict
+    logp: dict
+    value: dict
+    reward: jnp.ndarray      # shared scalar (mean over agents)
+    discount: jnp.ndarray
+    advantage: dict
+    returns: dict
+
+
+def make_ppo_networks(env, cfg: PPOConfig, centralised: bool):
+    spec: EnvSpec = env.spec()
+    ids = list(spec.agent_ids)
+    num_actions = {a: spec.actions[a].num_values for a in ids}
+    obs_dims = {a: spec.observations[a].shape[0] for a in ids}
+    state_dim = spec.state.shape[0]
+
+    homogeneous = len(set((obs_dims[a], num_actions[a]) for a in ids)) == 1
+    share = cfg.shared_weights and homogeneous
+
+    actors = {a: MLP((obs_dims[a], *cfg.hidden_sizes, num_actions[a])) for a in ids}
+    critic_in = {a: (state_dim if centralised else obs_dims[a]) for a in ids}
+    critics = {a: MLP((critic_in[a], *cfg.hidden_sizes, 1)) for a in ids}
+
+    def init(key):
+        ka, kc = jax.random.split(key)
+        if share:
+            return {
+                "actor": {"shared": actors[ids[0]].init(ka)},
+                "critic": {"shared": critics[ids[0]].init(kc)},
+            }
+        kas = jax.random.split(ka, len(ids))
+        kcs = jax.random.split(kc, len(ids))
+        return {
+            "actor": {a: actors[a].init(k) for a, k in zip(ids, kas)},
+            "critic": {a: critics[a].init(k) for a, k in zip(ids, kcs)},
+        }
+
+    def logits(params, agent, obs):
+        p = params["actor"]["shared"] if share else params["actor"][agent]
+        return actors[agent].apply(p, obs)
+
+    def value(params, agent, critic_obs):
+        p = params["critic"]["shared"] if share else params["critic"][agent]
+        return critics[agent].apply(p, critic_obs)[..., 0]
+
+    return ids, num_actions, init, logits, value
+
+
+@dataclasses.dataclass(frozen=True)
+class PPOSystem:
+    env: object
+    spec: EnvSpec
+    cfg: PPOConfig
+    centralised: bool
+    name: str
+
+    def build(self):
+        env, cfg = self.env, self.cfg
+        ids, num_actions, init_params, logits_fn, value_fn = make_ppo_networks(
+            env, cfg, self.centralised
+        )
+        opt = optim.chain(
+            optim.clip_by_global_norm(cfg.max_grad_norm),
+            optim.adamw(cfg.learning_rate),
+        )
+        centralised = self.centralised
+
+        def critic_obs(obs, state, agent):
+            return state if centralised else obs[agent]
+
+        def init_train(key):
+            params = init_params(key)
+            return TrainState(params, params, opt.init(params), jnp.zeros((), jnp.int32))
+
+        def act(params, obs, state, key):
+            actions, logps, values = {}, {}, {}
+            for i, a in enumerate(ids):
+                lg = logits_fn(params, a, obs[a])
+                k = jax.random.fold_in(key, i)
+                act_ = jax.random.categorical(k, lg)
+                lp = jax.nn.log_softmax(lg)
+                logps[a] = jnp.take_along_axis(lp, act_[..., None], axis=-1)[..., 0]
+                actions[a] = act_.astype(jnp.int32)
+                values[a] = value_fn(params, a, critic_obs(obs, state, a))
+            return actions, logps, values
+
+        def rollout(params, env_state, ts, key):
+            """Collect cfg.rollout_len steps from vmapped envs."""
+
+            def step(carry, _):
+                env_state, ts, key = carry
+                key, k_act, k_reset = jax.random.split(key, 3)
+                obs = ts.observation
+                gs = jax.vmap(env.global_state)(env_state)
+                actions, logps, values = act(params, obs, gs, k_act)
+                new_env_state, new_ts = jax.vmap(env.step)(env_state, actions)
+                reward = jnp.mean(jnp.stack(list(new_ts.reward.values())), axis=0)
+                done = new_ts.step_type == StepType.LAST
+                n = done.shape[0]
+                r_state, r_ts = jax.vmap(env.reset)(jax.random.split(k_reset, n))
+
+                def sel(new, old):
+                    d = done.reshape(done.shape + (1,) * (new.ndim - 1))
+                    return jnp.where(d, new, old)
+
+                env_state2 = jax.tree_util.tree_map(sel, r_state, new_env_state)
+                ts2 = jax.tree_util.tree_map(sel, r_ts, new_ts)
+                data = dict(
+                    obs=obs,
+                    state=gs,
+                    actions=actions,
+                    logp=logps,
+                    value=values,
+                    reward=reward,
+                    discount=new_ts.discount,
+                )
+                return (env_state2, ts2, key), data
+
+            (env_state, ts, key), traj = jax.lax.scan(
+                step, (env_state, ts, key), None, length=cfg.rollout_len
+            )
+            return env_state, ts, traj
+
+        def gae(traj, last_values):
+            adv, ret = {}, {}
+            for a in ids:
+                v = traj["value"][a]  # (T, B)
+                r = traj["reward"]
+                disc = traj["discount"] * cfg.gamma
+
+                def back(carry, inp):
+                    gae_t, v_next = carry
+                    v_t, r_t, d_t = inp
+                    delta = r_t + d_t * v_next - v_t
+                    gae_t = delta + d_t * cfg.gae_lambda * gae_t
+                    return (gae_t, v_t), gae_t
+
+                (_, _), advs = jax.lax.scan(
+                    back,
+                    (jnp.zeros_like(last_values[a]), last_values[a]),
+                    (v, r, disc),
+                    reverse=True,
+                )
+                adv[a] = advs
+                ret[a] = advs + v
+            return adv, ret
+
+        def loss_fn(params, minibatch):
+            total = 0.0
+            metrics = {}
+            for a in ids:
+                lg = logits_fn(params, a, minibatch["obs"][a])
+                lp_all = jax.nn.log_softmax(lg)
+                lp = jnp.take_along_axis(
+                    lp_all, minibatch["actions"][a][..., None], axis=-1
+                )[..., 0]
+                ratio = jnp.exp(lp - minibatch["logp"][a])
+                adv = minibatch["advantage"][a]
+                adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+                pg = -jnp.minimum(
+                    ratio * adv,
+                    jnp.clip(ratio, 1 - cfg.clip_eps, 1 + cfg.clip_eps) * adv,
+                )
+                v = value_fn(
+                    params, a, critic_obs(minibatch["obs"], minibatch["state"], a)
+                )
+                v_loss = jnp.square(v - minibatch["returns"][a])
+                ent = -jnp.sum(jnp.exp(lp_all) * lp_all, axis=-1)
+                total = total + jnp.mean(
+                    pg + cfg.value_coef * v_loss - cfg.entropy_coef * ent
+                )
+            metrics["loss"] = total
+            return total, metrics
+
+        def update(train: TrainState, traj, last_values, key):
+            adv, ret = gae(traj, last_values)
+            T = cfg.rollout_len
+            B = traj["reward"].shape[1]
+            data = dict(traj, advantage=adv, returns=ret)
+            flat = jax.tree_util.tree_map(
+                lambda x: x.reshape((T * B,) + x.shape[2:]), data
+            )
+
+            def epoch(carry, _):
+                params, opt_state, key = carry
+                key, kp = jax.random.split(key)
+                perm = jax.random.permutation(kp, T * B)
+                shuffled = jax.tree_util.tree_map(lambda x: x[perm], flat)
+                mb_size = (T * B) // cfg.num_minibatches
+                mbs = jax.tree_util.tree_map(
+                    lambda x: x[: mb_size * cfg.num_minibatches].reshape(
+                        (cfg.num_minibatches, mb_size) + x.shape[1:]
+                    ),
+                    shuffled,
+                )
+
+                def mb_step(carry, mb):
+                    params, opt_state = carry
+                    (loss, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                        params, mb
+                    )
+                    if cfg.distributed_axis:
+                        grads = jax.lax.pmean(grads, cfg.distributed_axis)
+                    updates, opt_state = opt.update(grads, opt_state, params)
+                    params = optim.apply_updates(params, updates)
+                    return (params, opt_state), loss
+
+                (params, opt_state), losses = jax.lax.scan(
+                    mb_step, (params, opt_state), mbs
+                )
+                return (params, opt_state, key), jnp.mean(losses)
+
+            (params, opt_state, _), losses = jax.lax.scan(
+                epoch, (train.params, train.opt_state, key), None, length=cfg.epochs
+            )
+            return (
+                TrainState(params, params, opt_state, train.steps + 1),
+                {"loss": jnp.mean(losses)},
+            )
+
+        def train_fn(key, num_updates: int, num_envs: int):
+            k_init, k_env, k_run = jax.random.split(key, 3)
+            train = init_train(k_init)
+            env_state, ts = jax.vmap(env.reset)(jax.random.split(k_env, num_envs))
+
+            @jax.jit
+            def run(train, env_state, ts, key):
+                def one_update(carry, _):
+                    train, env_state, ts, key = carry
+                    key, k_roll, k_upd, k_last = jax.random.split(key, 4)
+                    env_state, ts, traj = rollout(train.params, env_state, ts, k_roll)
+                    gs = jax.vmap(env.global_state)(env_state)
+                    _, _, last_values = act(train.params, ts.observation, gs, k_last)
+                    train, metrics = update(train, traj, last_values, k_upd)
+                    metrics["reward"] = jnp.mean(traj["reward"])
+                    return (train, env_state, ts, key), metrics
+
+                return jax.lax.scan(
+                    one_update, (train, env_state, ts, key), None, length=num_updates
+                )
+
+            (train, *_), metrics = run(train, env_state, ts, k_run)
+            return train, metrics
+
+        return dict(
+            init_train=init_train,
+            act=act,
+            rollout=rollout,
+            update=update,
+            train=train_fn,
+            ids=ids,
+            name=self.name,
+        )
+
+
+def make_ippo(env, cfg: PPOConfig = PPOConfig()):
+    return PPOSystem(env, env.spec(), cfg, centralised=False, name="ippo").build()
+
+
+def make_mappo(env, cfg: PPOConfig = PPOConfig()):
+    return PPOSystem(env, env.spec(), cfg, centralised=True, name="mappo").build()

@@ -1,0 +1,14 @@
+"""QMIX (Rashid et al. 2018) — monotonic value-function factorisation.
+
+MADQN wrapped with the state-conditioned hypernetwork mixer.
+"""
+from repro.core.modules.mixing import MonotonicMixing
+from repro.systems.offpolicy import OffPolicyConfig, make_offpolicy_system
+
+
+def make_qmix(
+    env, cfg: OffPolicyConfig = OffPolicyConfig(), embed_dim: int = 32
+):
+    return make_offpolicy_system(
+        env, cfg, mixer=MonotonicMixing(embed_dim=embed_dim), name="qmix"
+    )

@@ -1,0 +1,10 @@
+"""VDN (Sunehag et al. 2017) — MADQN wrapped with additive mixing.
+
+The paper's ``mixing.AdditiveMixing(architecture)`` module composition.
+"""
+from repro.core.modules.mixing import AdditiveMixing
+from repro.systems.offpolicy import OffPolicyConfig, make_offpolicy_system
+
+
+def make_vdn(env, cfg: OffPolicyConfig = OffPolicyConfig()):
+    return make_offpolicy_system(env, cfg, mixer=AdditiveMixing(), name="vdn")

@@ -1,0 +1,58 @@
+"""Checkpoint roundtrip tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+
+def test_roundtrip(tmp_path):
+    tree = {
+        "layers": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4)},
+        "scale": jnp.ones((5,), jnp.bfloat16),
+        "steps": jnp.asarray(7, jnp.int32),
+    }
+    d = str(tmp_path)
+    save_checkpoint(d, 42, tree)
+    assert latest_step(d) == 42
+    target = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    restored = restore_checkpoint(d, 42, target)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32)),
+        tree,
+        restored,
+    )
+    assert restored["scale"].dtype == jnp.bfloat16
+
+
+def test_latest_step_picks_max(tmp_path):
+    d = str(tmp_path)
+    tree = {"x": jnp.zeros(())}
+    for s in (1, 10, 5):
+        save_checkpoint(d, s, tree)
+    assert latest_step(d) == 10
+
+
+def test_missing_key_raises(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, {"x": jnp.zeros(())})
+    try:
+        restore_checkpoint(d, 1, {"y": jnp.zeros(())})
+        assert False, "expected KeyError"
+    except KeyError:
+        pass
+
+
+def test_model_params_roundtrip(tmp_path):
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+
+    cfg = get_smoke_config("internlm2-1.8b")
+    params = M.init_model(jax.random.key(0), cfg)
+    d = str(tmp_path)
+    save_checkpoint(d, 3, params)
+    target = jax.tree_util.tree_map(jnp.zeros_like, params)
+    restored = restore_checkpoint(d, 3, target)
+    a = jax.tree_util.tree_leaves(params)[0]
+    b = jax.tree_util.tree_leaves(restored)[0]
+    np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))

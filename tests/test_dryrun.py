@@ -1,0 +1,52 @@
+"""Dry-run lowering tests (subprocess: needs 512 host devices).
+
+The full 40-pair x 2-mesh sweep lives in the benchmark harness; here we
+prove the machinery on one representative arch per family, both meshes.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def run_dryrun(args, timeout=560):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=timeout,
+        cwd=ROOT,
+    )
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "arch,shape",
+    [
+        ("internlm2-1.8b", "train_4k"),     # dense
+        ("olmoe-1b-7b", "decode_32k"),      # moe
+        ("falcon-mamba-7b", "long_500k"),   # ssm
+        ("zamba2-2.7b", "prefill_32k"),     # hybrid
+        ("musicgen-large", "decode_32k"),   # audio
+        ("llava-next-mistral-7b", "train_4k"),  # vlm
+    ],
+)
+def test_single_pod_lowering(arch, shape):
+    r = run_dryrun(["--arch", arch, "--shape", shape])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "[OK]" in r.stdout
+
+
+@pytest.mark.slow
+def test_multi_pod_lowering():
+    r = run_dryrun(["--arch", "internlm2-1.8b", "--shape", "train_4k", "--multi-pod"])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "2x16x16" in r.stdout

@@ -1,0 +1,107 @@
+"""Environment API invariants (hypothesis property tests + spec conformance)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.envs import REGISTRY
+from repro.envs.api import StepType
+
+
+def random_actions(spec, rng):
+    acts = {}
+    for a in spec.agent_ids:
+        s = spec.actions[a]
+        if hasattr(s, "num_values"):
+            acts[a] = jnp.asarray(rng.integers(0, s.num_values), jnp.int32)
+        else:
+            acts[a] = jnp.asarray(rng.uniform(-1, 1, s.shape), jnp.float32)
+    return acts
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_spec_conformance(name):
+    env = REGISTRY[name]()
+    spec = env.spec()
+    state, ts = jax.jit(env.reset)(jax.random.key(0))
+    assert int(ts.step_type) == StepType.FIRST
+    rng = np.random.default_rng(0)
+    step = jax.jit(env.step)
+    for _ in range(5):
+        state, ts = step(state, random_actions(spec, rng))
+        for a in spec.agent_ids:
+            assert ts.observation[a].shape == spec.observations[a].shape
+            assert np.isfinite(np.asarray(ts.observation[a])).all()
+            assert np.isfinite(float(ts.reward[a]))
+        gs = env.global_state(state)
+        assert gs.shape == spec.state.shape
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_determinism_same_key(name):
+    env = REGISTRY[name]()
+    spec = env.spec()
+    rng = np.random.default_rng(1)
+    acts = random_actions(spec, rng)
+    outs = []
+    for _ in range(2):
+        state, ts = env.reset(jax.random.key(7))
+        state, ts = env.step(state, acts)
+        outs.append(jax.tree_util.tree_map(np.asarray, ts))
+    a, b = outs
+    jax.tree_util.tree_map(np.testing.assert_array_equal, a, b)
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_vmap_matches_single(name):
+    """Vectorised env == N independent envs (the Anakin correctness premise)."""
+    env = REGISTRY[name]()
+    spec = env.spec()
+    keys = jax.random.split(jax.random.key(3), 4)
+    rng = np.random.default_rng(2)
+    acts = random_actions(spec, rng)
+    bacts = jax.tree_util.tree_map(lambda x: jnp.broadcast_to(x, (4,) + x.shape), acts)
+
+    bstate, bts = jax.vmap(env.reset)(keys)
+    bstate, bts = jax.vmap(env.step)(bstate, bacts)
+    for i in (0, 3):
+        s, ts = env.reset(keys[i])
+        s, ts = env.step(s, acts)
+        for a in spec.agent_ids:
+            np.testing.assert_allclose(
+                np.asarray(bts.observation[a][i]), np.asarray(ts.observation[a]),
+                rtol=1e-6, atol=1e-6,
+            )
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 5), st.integers(0, 2**31 - 1))
+def test_switch_game_reward_logic(n_agents, seed):
+    """Reward is only ever paid on a Tell, and is +-1."""
+    from repro.envs import SwitchGame
+
+    env = SwitchGame(num_agents=n_agents)
+    state, ts = env.reset(jax.random.key(seed))
+    # everyone says Tell on day one: correct iff all have been in the room
+    acts = {a: jnp.asarray(1, jnp.int32) for a in env.agent_ids}
+    all_visited = bool(jnp.all(state.has_been))
+    state, ts = env.step(state, acts)
+    r = float(ts.reward["agent_0"])
+    assert r == (1.0 if all_visited else -1.0)
+    assert int(ts.step_type) == StepType.LAST
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 40))
+def test_episodes_terminate_within_horizon(seed, steps):
+    from repro.envs import Spread
+
+    env = Spread(num_agents=2, horizon=10)
+    state, ts = env.reset(jax.random.key(seed))
+    acts = {a: jnp.asarray(0, jnp.int32) for a in env.agent_ids}
+    for t in range(min(steps, 10)):
+        state, ts = env.step(state, acts)
+    if steps >= 10:
+        assert int(ts.step_type) == StepType.LAST
+        assert float(ts.discount) == 0.0

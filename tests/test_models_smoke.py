@@ -1,0 +1,116 @@
+"""Per-architecture smoke tests: reduced variants, one fwd/train step on CPU.
+
+The assignment requires: instantiate a REDUCED variant of each assigned
+family (<=2 layers for dense, d_model<=512, <=4 experts) and run one
+forward/train step asserting output shapes + no NaNs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.launch.steps import make_train_step
+from repro.models import model as M
+
+
+def make_batch(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    if cfg.arch_type == "audio":
+        toks = rng.integers(0, cfg.vocab, (B, S + 1, cfg.num_codebooks)).astype(np.int32)
+        return {
+            "tokens": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:]),
+        }
+    if cfg.arch_type == "vlm":
+        T = S - cfg.vision_tokens
+        toks = rng.integers(0, cfg.vocab, (B, T + 1)).astype(np.int32)
+        return {
+            "tokens": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:]),
+            "vision_embeds": jnp.asarray(
+                rng.normal(size=(B, cfg.vision_tokens, cfg.d_model)),
+                cfg.activation_dtype,
+            ),
+        }
+    toks = rng.integers(0, cfg.vocab, (B, S + 1)).astype(np.int32)
+    return {"tokens": jnp.asarray(toks[:, :-1]), "labels": jnp.asarray(toks[:, 1:])}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_config_limits(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.num_layers <= 4
+    assert cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+    # reduced config stays in the same family as the full one
+    assert cfg.arch_type == get_config(arch).arch_type
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finiteness(arch):
+    cfg = get_smoke_config(arch)
+    params = M.init_model(jax.random.key(0), cfg)
+    batch = make_batch(cfg)
+    loss, metrics = jax.jit(lambda p, b: M.forward_train(p, b, cfg))(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), (arch, float(loss))
+    for k, v in metrics.items():
+        assert np.isfinite(float(v)), (arch, k)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step_updates_params(arch):
+    cfg = get_smoke_config(arch)
+    params = M.init_model(jax.random.key(0), cfg)
+    opt, train_step = make_train_step(cfg, lr=1e-3)
+    opt_state = opt.init(params)
+    batch = make_batch(cfg)
+    new_params, new_opt, metrics = jax.jit(train_step)(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # at least one parameter changed, none became NaN
+    changed = jax.tree_util.tree_map(
+        lambda a, b: bool(jnp.any(a != b)), params, new_params
+    )
+    assert any(jax.tree_util.tree_leaves(changed)), arch
+    finite = jax.tree_util.tree_map(
+        lambda a: bool(jnp.all(jnp.isfinite(a.astype(jnp.float32)))), new_params
+    )
+    assert all(jax.tree_util.tree_leaves(finite)), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_loss_decreases_over_steps(arch):
+    """A few steps on a fixed batch must reduce the loss (overfit check)."""
+    cfg = get_smoke_config(arch)
+    params = M.init_model(jax.random.key(0), cfg)
+    opt, train_step = make_train_step(cfg, lr=3e-3)
+    opt_state = opt.init(params)
+    batch = make_batch(cfg)
+    step = jax.jit(train_step)
+    losses = []
+    for _ in range(8):
+        params, opt_state, metrics = step(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0], (arch, losses)
+
+
+def test_full_configs_match_assignment_table():
+    """Exact assigned hyperparameters (spot-check every arch)."""
+    rows = {
+        "minitron-8b": dict(num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8, d_ff=16384, vocab=256000),
+        "llava-next-mistral-7b": dict(num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8, d_ff=14336, vocab=32000),
+        "internlm2-1.8b": dict(num_layers=24, d_model=2048, num_heads=16, num_kv_heads=8, d_ff=8192, vocab=92544),
+        "olmoe-1b-7b": dict(num_layers=16, d_model=2048, num_heads=16, num_kv_heads=16, d_ff=1024, vocab=50304, num_experts=64, top_k=8),
+        "kimi-k2-1t-a32b": dict(num_layers=61, d_model=7168, num_heads=64, num_kv_heads=8, d_ff=2048, vocab=163840, num_experts=384, top_k=8),
+        "granite-8b": dict(num_layers=36, d_model=4096, num_heads=32, num_kv_heads=8, d_ff=14336, vocab=49152),
+        "falcon-mamba-7b": dict(num_layers=64, d_model=4096, d_ff=0, vocab=65024, ssm_state=16),
+        "zamba2-2.7b": dict(num_layers=54, d_model=2560, num_heads=32, num_kv_heads=32, d_ff=10240, vocab=32000, ssm_state=64),
+        "musicgen-large": dict(num_layers=48, d_model=2048, num_heads=32, num_kv_heads=32, d_ff=8192, vocab=2048, num_codebooks=4),
+        "llama3-405b": dict(num_layers=126, d_model=16384, num_heads=128, num_kv_heads=8, d_ff=53248, vocab=128256),
+    }
+    for arch, expect in rows.items():
+        cfg = get_config(arch)
+        for k, v in expect.items():
+            assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+        assert cfg.source, arch  # every config cites its source

@@ -1,0 +1,41 @@
+"""IPPO/MAPPO behaviour tests."""
+import jax
+import numpy as np
+
+from repro.envs import MatrixGame, SpeakerListener
+from repro.systems.onpolicy import PPOConfig, make_ippo, make_mappo
+
+
+def test_ippo_learns_matrix_game():
+    env = MatrixGame(horizon=10)
+    system = make_ippo(env, PPOConfig(rollout_len=32, epochs=4, num_minibatches=2,
+                                      entropy_coef=0.02, learning_rate=1e-3))
+    train, metrics = system["train"](jax.random.key(0), num_updates=150, num_envs=16)
+    r = np.asarray(metrics["reward"])
+    assert r[-15:].mean() > r[:15].mean() + 1.0, (r[:15].mean(), r[-15:].mean())
+
+
+def test_mappo_improves_speaker_listener():
+    env = SpeakerListener()
+    system = make_mappo(
+        env, PPOConfig(rollout_len=64, shared_weights=False, learning_rate=7e-4)
+    )
+    train, metrics = system["train"](jax.random.key(0), num_updates=120, num_envs=16)
+    r = np.asarray(metrics["reward"])
+    assert r[-12:].mean() > r[:12].mean(), (r[:12].mean(), r[-12:].mean())
+
+
+def test_centralised_critic_sees_state():
+    """MAPPO's critic input dim == global state dim (CTDE wiring)."""
+    env = MatrixGame()
+    ippo = make_ippo(env, PPOConfig())
+    mappo = make_mappo(env, PPOConfig())
+    k = jax.random.key(0)
+    ti = ippo["init_train"](k)
+    tm = mappo["init_train"](k)
+    spec = env.spec()
+    # ippo critic first layer: obs dim; mappo: state dim
+    wi = jax.tree_util.tree_leaves(ti.params["critic"])[1]
+    wm = jax.tree_util.tree_leaves(tm.params["critic"])[1]
+    assert wi.shape[0] == spec.observations["agent_0"].shape[0]
+    assert wm.shape[0] == spec.state.shape[0]

@@ -1,0 +1,73 @@
+"""Optimizer substrate tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+
+
+def test_adamw_minimises_quadratic():
+    opt = optim.adamw(0.1)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"]))
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        updates, state = opt.update(g, state, params)
+        params = optim.apply_updates(params, updates)
+    assert float(loss(params)) < 1e-3
+
+
+def test_clip_by_global_norm():
+    opt = optim.clip_by_global_norm(1.0)
+    grads = {"a": jnp.full((4,), 100.0), "b": jnp.full((3,), -100.0)}
+    state = opt.init(grads)
+    clipped, _ = opt.update(grads, state)
+    assert float(optim.global_norm(clipped)) <= 1.0 + 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(1e-4, 1e-1), st.integers(0, 2**31 - 1))
+def test_sgd_step_direction(lr, seed):
+    opt = optim.sgd(lr)
+    g = jax.random.normal(jax.random.key(seed), (5,))
+    state = opt.init({"w": jnp.zeros((5,))})
+    updates, _ = opt.update({"w": g}, state)
+    np.testing.assert_allclose(np.asarray(updates["w"]), -lr * np.asarray(g), rtol=1e-5)
+
+
+def test_chain_composes():
+    opt = optim.chain(optim.clip_by_global_norm(1.0), optim.sgd(1.0))
+    params = {"w": jnp.zeros((2,))}
+    state = opt.init(params)
+    updates, _ = opt.update({"w": jnp.asarray([30.0, 40.0])}, state, params)
+    # after clip, norm 1; sgd lr=1 -> update = -clipped
+    np.testing.assert_allclose(
+        np.asarray(updates["w"]), [-0.6, -0.8], rtol=1e-5
+    )
+
+
+def test_schedules():
+    from repro.optim import linear_warmup_cosine_decay
+
+    sched = linear_warmup_cosine_decay(1.0, 10, 100, end_value=0.1)
+    assert float(sched(0)) == 0.0
+    assert abs(float(sched(10)) - 1.0) < 1e-6
+    assert abs(float(sched(100)) - 0.1) < 1e-6
+    assert float(sched(55)) < 1.0
+
+
+def test_adamw_mixed_dtype_tree():
+    """Param trees mix bf16 matmul weights and fp32 norms (the LM case)."""
+    params = {"w": jnp.zeros((4, 4), jnp.bfloat16), "scale": jnp.ones((4,), jnp.float32)}
+    opt = optim.adamw(1e-2)
+    state = opt.init(params)
+    grads = jax.tree_util.tree_map(jnp.ones_like, params)
+    updates, state = opt.update(grads, state, params)
+    new = optim.apply_updates(params, updates)
+    assert new["w"].dtype == jnp.bfloat16
+    assert new["scale"].dtype == jnp.float32

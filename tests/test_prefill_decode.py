@@ -1,0 +1,88 @@
+"""Prefill+decode must agree with the full training forward for every arch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.models import model as M
+from repro.models.layers import rmsnorm
+
+
+def full_logits(params, batch, cfg):
+    h, _ = M._embed_tokens(params, batch, cfg)
+    h, _ = M._run_layers_train(params, h, cfg)
+    h = rmsnorm(params["final_norm"], h)
+    w = M._unembed_weight(params, cfg)
+    if cfg.num_codebooks:
+        return jnp.einsum("bsd,kdv->bskv", h, w)
+    return h @ w
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_then_decode_matches_full_forward(arch):
+    cfg = get_smoke_config(arch)
+    params = M.init_model(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    B, S = 2, 32
+
+    if cfg.arch_type == "audio":
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S + 1, cfg.num_codebooks)), jnp.int32)
+        prompt = {"tokens": toks[:, :S]}
+        next_tok = toks[:, S : S + 1]
+    elif cfg.arch_type == "vlm":
+        V = cfg.vision_tokens
+        T = S - V
+        txt = jnp.asarray(rng.integers(0, cfg.vocab, (B, T + 1)), jnp.int32)
+        ve = jnp.asarray(rng.normal(size=(B, V, cfg.d_model)), jnp.float32)
+        prompt = {"tokens": txt[:, :T], "vision_embeds": ve}
+        next_tok = txt[:, T : T + 1]
+    else:
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S + 1)), jnp.int32)
+        prompt = {"tokens": toks[:, :S]}
+        next_tok = toks[:, S : S + 1]
+
+    last_logits, cache = jax.jit(
+        lambda p, b: M.prefill(p, b, cfg, max_len=S + 4)
+    )(params, prompt)
+    fl = full_logits(params, prompt, cfg)
+    np.testing.assert_allclose(
+        np.asarray(last_logits[:, -1]), np.asarray(fl[:, -1]), rtol=2e-4, atol=2e-4
+    )
+
+    dec_logits, cache2 = jax.jit(lambda p, c, t: M.decode_step(p, c, t, cfg))(
+        params, cache, next_tok
+    )
+    assert (np.asarray(cache2["pos"]) == S + 1).all()
+    batch2 = dict(prompt)
+    batch2["tokens"] = jnp.concatenate([prompt["tokens"], next_tok], axis=1)
+    fl2 = full_logits(params, batch2, cfg)
+    np.testing.assert_allclose(
+        np.asarray(dec_logits[:, 0]), np.asarray(fl2[:, -1]), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_sliding_window_ring_cache_drops_old_tokens():
+    """With a window smaller than the prompt, decode must equal a windowed
+    oracle, not the full-attention one."""
+    cfg = get_smoke_config("minitron-8b")  # attn_window=64 in smoke
+    import dataclasses
+
+    cfg = dataclasses.replace(cfg, attn_window=16)
+    params = M.init_model(jax.random.key(0), cfg)
+    rng = np.random.default_rng(1)
+    B, S = 1, 40
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S + 1)), jnp.int32)
+    prompt = {"tokens": toks[:, :S]}
+
+    _, cache = jax.jit(lambda p, b: M.prefill(p, b, cfg, max_len=S + 4))(params, prompt)
+    # window cache capacity = attn_window, not prompt length
+    assert cache["kv"]["k"].shape[2] == 16
+    dec_logits, _ = jax.jit(lambda p, c, t: M.decode_step(p, c, t, cfg))(
+        params, cache, toks[:, S : S + 1]
+    )
+    batch2 = {"tokens": toks}
+    fl = full_logits(params, batch2, cfg)  # windowed oracle via cfg.attn_window
+    np.testing.assert_allclose(
+        np.asarray(dec_logits[:, 0]), np.asarray(fl[:, -1]), rtol=2e-3, atol=2e-3
+    )

@@ -1,0 +1,76 @@
+"""Logical-axis sharding rules (divisibility dropping, profiles)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import (
+    DEFAULT_RULES,
+    FSDP_TP_RULES,
+    logical_to_spec,
+    rules_for,
+    tree_shardings,
+)
+
+# A host-only mesh over the single CPU device would have size-1 axes, which
+# can't exercise divisibility. Use an abstract mesh instead.
+
+
+def make_mesh():
+    return jax.sharding.AbstractMesh(
+        (2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
+    )
+
+
+def test_basic_mapping():
+    mesh = make_mesh()
+    spec = logical_to_spec(("vocab", "embed"), DEFAULT_RULES, mesh)
+    assert spec == P("model")
+
+
+def test_batch_uses_pod_and_data():
+    mesh = jax.sharding.AbstractMesh(
+        (2, 2, 4), ("pod", "data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 3,
+    )
+    spec = logical_to_spec(("batch", None, "embed"), DEFAULT_RULES, mesh)
+    assert spec == P(("pod", "data"))
+
+
+def test_non_divisible_axis_dropped():
+    mesh = make_mesh()
+    # 8 kv heads on a 4-way model axis: fine; 6 heads: dropped
+    assert logical_to_spec(("kv_heads",), DEFAULT_RULES, mesh, shape=(8,)) == P("model")
+    assert logical_to_spec(("kv_heads",), DEFAULT_RULES, mesh, shape=(6,)) == P()
+
+
+def test_axis_never_reused_within_spec():
+    mesh = make_mesh()
+    # both vocab and ffn map to "model": second use must drop
+    spec = logical_to_spec(("vocab", "ffn"), DEFAULT_RULES, mesh)
+    assert spec == P("model")
+
+
+def test_fsdp_profile_shards_embed_over_data():
+    mesh = make_mesh()
+    spec = logical_to_spec(("embed", "ffn"), FSDP_TP_RULES, mesh, shape=(8, 8))
+    assert spec == P("data", "model")
+    # but activations with a batch dim keep data for the batch
+    spec = logical_to_spec(("batch", None, "embed"), FSDP_TP_RULES, mesh, shape=(8, 4, 8))
+    assert spec == P("data")
+
+
+def test_tree_shardings_with_shapes():
+    mesh = make_mesh()
+    axes = {"w": ("embed", "ffn"), "b": ("ffn",)}
+    shapes = {
+        "w": jax.ShapeDtypeStruct((16, 8), jax.numpy.float32),
+        "b": jax.ShapeDtypeStruct((6,), jax.numpy.float32),  # 6 % 4 != 0
+    }
+    out = tree_shardings(axes, mesh, DEFAULT_RULES, shapes)
+    assert out["w"].spec == P(None, "model")
+    assert out["b"].spec == P()
+
+
+def test_unknown_profile_raises():
+    with pytest.raises(KeyError):
+        rules_for("nope")

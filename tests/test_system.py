@@ -1,0 +1,78 @@
+"""End-to-end behaviour of the MARL systems (the paper's core claims)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.system import run_environment_loop, train_anakin
+from repro.envs import MatrixGame, SwitchGame, Spread
+from repro.systems.madqn import make_madqn
+from repro.systems.offpolicy import OffPolicyConfig
+from repro.systems.qmix import make_qmix
+from repro.systems.vdn import make_vdn
+
+FAST_CFG = OffPolicyConfig(
+    buffer_capacity=5_000,
+    min_replay=100,
+    batch_size=32,
+    eps_decay_steps=2_000,
+    target_update_period=50,
+    learning_rate=1e-3,
+)
+
+
+@pytest.mark.parametrize("maker", [make_madqn, make_vdn, make_qmix])
+def test_value_system_learns_matrix_game(maker):
+    """All value-decomposition systems must beat random on the climbing game."""
+    env = MatrixGame(horizon=10)
+    system = maker(env, FAST_CFG)
+    _, metrics = train_anakin(system, jax.random.key(0), 3_000, num_envs=8)
+    r = np.asarray(metrics["reward"])
+    early, late = r[:200].mean(), r[-200:].mean()
+    assert late > early + 2.0, (early, late)
+    assert late > 3.0, late  # random play averages ~ -3.4
+
+
+def test_faithful_python_loop_runs():
+    """The paper's Block-1 environment loop end-to-end (slow path)."""
+    env = MatrixGame(horizon=10)
+    import dataclasses
+
+    cfg = dataclasses.replace(FAST_CFG, min_replay=20)  # 4 eps x 10 steps
+    system = make_madqn(env, cfg)
+    train, buffer, returns = run_environment_loop(
+        system, jax.random.key(0), num_episodes=4
+    )
+    assert len(returns) == 4
+    assert int(train.steps) > 0  # trainer actually updated
+    assert all(np.isfinite(r) for r in returns)
+
+
+def test_anakin_metrics_finite():
+    env = Spread(num_agents=3, horizon=25)
+    system = make_madqn(env, FAST_CFG)
+    st, metrics = train_anakin(system, jax.random.key(1), 50, num_envs=4)
+    assert np.isfinite(np.asarray(metrics["reward"])).all()
+    # replay buffer got filled
+    assert int(st.buffer.size) == 50 * 4
+
+
+def test_vdn_learns_smax_lite():
+    """The paper's Fig-4-bottom setting: VDN improves on the 3-marine battle."""
+    from repro.envs import SmaxLite
+
+    env = SmaxLite(num_agents=3)
+    cfg = OffPolicyConfig(
+        buffer_capacity=50_000,
+        min_replay=500,
+        batch_size=64,
+        eps_decay_steps=4_000,
+        target_update_period=200,
+        learning_rate=1e-3,
+    )
+    system = make_vdn(env, cfg)
+    _, metrics = train_anakin(system, jax.random.key(0), 8_000, num_envs=8)
+    r = np.asarray(metrics["reward"])
+    assert r[-800:].mean() > 2.0 * r[:800].mean(), (
+        r[:800].mean(),
+        r[-800:].mean(),
+    )
