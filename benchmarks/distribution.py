@@ -22,6 +22,7 @@ from repro.envs import Spread
 from repro.systems.madqn import make_madqn
 from repro.systems.offpolicy import OffPolicyConfig
 from repro.core.system import train_distributed, train_anakin
+from repro.launch.mesh import make_auto_mesh
 
 iters = {iters}
 for n_exec in (1, 2, 4):
@@ -37,8 +38,7 @@ for n_exec in (1, 2, 4):
         jax.block_until_ready(st.train.params)
         r = float(np.asarray(metrics["reward"])[-iters//10:].mean())
     else:
-        mesh = jax.make_mesh((n_exec,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_auto_mesh((n_exec,), ("data",))
         params, metrics = train_distributed(system, key, iters, 8, mesh)
         r = float(np.asarray(metrics["reward"]).mean())
     dt = time.time() - t0

@@ -21,6 +21,7 @@ from repro.core.system import (
     train_anakin,
 )
 from repro.envs import Spread
+from repro.eval import make_evaluator
 from repro.systems.madqn import make_madqn
 from repro.systems.offpolicy import OffPolicyConfig
 
@@ -69,4 +70,32 @@ def bench(fast: bool = False):
             (f"speedup/anakin_vmap_{n_envs}env", dt / iters * 1e6,
              f"{sps:.0f} steps/s = {sps / sps_loop:.1f}x python loop")
         )
+
+    # --- fused greedy evaluator (repro.eval): same fusion story for eval.
+    # Baseline is an eval-mode python loop (training=False: no buffer adds,
+    # no updates) so the ratio is eval-vs-eval, not eval-vs-training.
+    train = st.train
+    t0 = time.time()
+    run_environment_loop(
+        system, key, num_episodes=n_eps, training=False, train_state=train
+    )
+    sps_eval_loop = n_eps * env.horizon / (time.time() - t0)
+    rows.append(
+        ("speedup/python_eval_loop", 1e6 / sps_eval_loop,
+         f"{sps_eval_loop:.0f} steps/s")
+    )
+
+    n_eval_envs = 16 if fast else 64
+    n_episodes = n_eval_envs * (2 if fast else 4)
+    eval_fn = jax.jit(make_evaluator(system, n_episodes, n_eval_envs))
+    jax.block_until_ready(eval_fn(train, key))  # warm compile
+    t0 = time.time()
+    jax.block_until_ready(eval_fn(train, key))
+    dt = time.time() - t0
+    eval_steps = n_episodes * env.horizon
+    sps_eval = eval_steps / dt
+    rows.append(
+        (f"speedup/fused_eval_{n_eval_envs}env", dt / eval_steps * 1e6,
+         f"{sps_eval:.0f} steps/s = {sps_eval / sps_eval_loop:.1f}x python eval loop")
+    )
     return rows

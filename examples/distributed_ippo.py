@@ -29,8 +29,9 @@ from repro.envs import Spread
 from repro.systems.madqn import make_madqn
 from repro.systems.offpolicy import OffPolicyConfig
 from repro.core.system import train_distributed
+from repro.launch.mesh import make_auto_mesh
 
-mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_auto_mesh((4,), ("data",))
 cfg = OffPolicyConfig(buffer_capacity=20000, min_replay=500, batch_size=64,
                       distributed_axis="data")
 params, metrics = train_distributed(make_madqn(Spread(num_agents=3), cfg),

@@ -30,15 +30,20 @@ system = make_madqn(
 
 # ---- Block 1 analogue: the executor-environment loop (faithful, python) ----
 print("== faithful environment loop (3 episodes) ==")
-train_state, buffer_state, returns = run_environment_loop(
+train_state, buffer_state, ev = run_environment_loop(
     system, jax.random.key(0), num_episodes=3
 )
-print("episode returns:", [round(r, 1) for r in returns])
+print("team episode returns:", [round(float(r), 1) for r in ev.episode_return])
 
-# ---- the JAX rewrite: same system, fused + vectorised ----
-print("== anakin: scan(3000) x vmap(8 envs), one jit ==")
-st, metrics = train_anakin(system, jax.random.key(0), num_iterations=3000, num_envs=8)
+# ---- the JAX rewrite: same system, fused + vectorised, eval in the jit ----
+print("== anakin: scan(3000) x vmap(8 envs) + greedy eval every 1000, one jit ==")
+st, metrics, evals = train_anakin(
+    system, jax.random.key(0), num_iterations=3000, num_envs=8,
+    eval_every=1000, eval_episodes=16,
+)
 r = np.asarray(metrics["reward"])
 print(f"mean reward/step: first200={r[:200].mean():.2f}  last200={r[-200:].mean():.2f}")
+print("greedy eval return per 1000 iters:",
+      np.asarray(evals.episode_return).mean(axis=-1).round(2))
 assert r[-200:].mean() > r[:200].mean(), "system failed to learn"
 print("learned the climbing game.")

@@ -5,7 +5,7 @@ from repro.core.system import (
     train_distributed,
     init_system_state,
 )
-from repro.core.types import Transition, TrainState, SystemState
+from repro.core.types import EvalMetrics, Transition, TrainState, SystemState
 from repro.core import architectures, buffer, modules
 
 __all__ = [
@@ -14,6 +14,7 @@ __all__ = [
     "train_anakin",
     "train_distributed",
     "init_system_state",
+    "EvalMetrics",
     "Transition",
     "TrainState",
     "SystemState",

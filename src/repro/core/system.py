@@ -24,9 +24,10 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core.types import SystemState, TrainState
+from repro.core.types import EvalMetrics, SystemState, TrainState, Transition
 from repro.envs.api import StepType
 
 
@@ -65,9 +66,11 @@ def run_environment_loop(
 ):
     """The paper's Block-1 executor-environment loop, one env, python-paced.
 
-    Returns (train_state, buffer_state, list of episode returns).
+    Returns (train_state, buffer_state, EvalMetrics over the episodes) —
+    per-agent and team (mean-over-agents) undiscounted returns.
     """
     env = system.env
+    ids = list(system.spec.agent_ids)
     key, k_init = jax.random.split(key)
     if train_state is None:
         train_state = system.init_train(k_init)
@@ -81,21 +84,21 @@ def run_environment_loop(
     step_env = jax.jit(env.step)
     gstate = jax.jit(env.global_state)
 
-    returns = []
+    team_returns, lengths = [], []
+    agent_returns = {a: [] for a in ids}
     for _ in range(num_episodes):
         key, k_reset = jax.random.split(key)
         # make initial observation for each agent
         env_state, ts = reset(k_reset)
         carry = system.initial_carry(())
-        ep_return = 0.0
+        ep_return = {a: 0.0 for a in ids}
+        ep_length = 0
         while int(ts.step_type) != StepType.LAST:
             key, k_act, k_upd = jax.random.split(key, 3)
             obs = ts.observation
             actions, carry = select(train_state, obs, carry, k_act)
             new_env_state, new_ts = step_env(env_state, actions)
             # make an observation for each agent (adder -> replay table)
-            from repro.core.types import Transition
-
             tr = Transition(
                 obs=obs,
                 actions=actions,
@@ -112,9 +115,19 @@ def run_environment_loop(
             if training and bool(system.can_sample(buffer_state)):
                 train_state, _ = update(train_state, buffer_state, k_upd)
             env_state, ts = new_env_state, new_ts
-            ep_return += float(list(new_ts.reward.values())[0])
-        returns.append(ep_return)
-    return train_state, buffer_state, returns
+            for a in ids:
+                ep_return[a] += float(new_ts.reward[a])
+            ep_length += 1
+        for a in ids:
+            agent_returns[a].append(ep_return[a])
+        team_returns.append(sum(ep_return.values()) / len(ids))
+        lengths.append(ep_length)
+    metrics = EvalMetrics(
+        episode_return=np.asarray(team_returns),
+        agent_returns={a: np.asarray(agent_returns[a]) for a in ids},
+        episode_length=np.asarray(lengths, np.int32),
+    )
+    return train_state, buffer_state, metrics
 
 
 # ------------------------------------------------------------ Anakin runner
@@ -122,8 +135,6 @@ def run_environment_loop(
 
 def _one_iteration(system: System, carry, key):
     """One vectorised step of every env + updates. carry = SystemState."""
-    from repro.core.types import Transition
-
     st: SystemState = carry
     key, k_act, k_upd, k_reset = jax.random.split(key, 4)
     num_envs = jax.tree_util.tree_leaves(st.env_state)[0].shape[0]
@@ -192,21 +203,66 @@ def init_system_state(system: System, key, num_envs: int) -> SystemState:
     )
 
 
-def train_anakin(system: System, key, num_iterations: int, num_envs: int):
+def train_anakin(
+    system: System,
+    key,
+    num_iterations: int,
+    num_envs: int,
+    eval_every: int = 0,
+    eval_episodes: int = 32,
+    eval_num_envs: Optional[int] = None,
+):
     """Fused jit training: scan(num_iterations) x vmap(num_envs).
 
     Returns (final SystemState, metrics stacked over iterations).
+
+    With ``eval_every > 0`` the greedy evaluator (`repro.eval`) runs inside
+    the same jit every `eval_every` iterations — no host round trip — and
+    the return becomes (state, metrics, EvalMetrics stacked over the
+    num_iterations // eval_every eval points).  Each eval uses the first
+    half of a split of the post-block scan key, so its returns are
+    reproducible by the standalone `repro.eval.evaluate` given the same
+    train state and key.
     """
     st = init_system_state(system, key, num_envs)
 
+    def train_body(carry, _):
+        st = carry
+        st, metrics = _one_iteration(system, st, st.key)
+        return st, metrics
+
+    if eval_every <= 0:
+        @jax.jit
+        def run(st):
+            return jax.lax.scan(train_body, st, None, length=num_iterations)
+
+        return run(st)
+
+    if num_iterations % eval_every:
+        raise ValueError(
+            f"num_iterations ({num_iterations}) must be a multiple of "
+            f"eval_every ({eval_every})"
+        )
+    num_blocks = num_iterations // eval_every
+    # local import: repro.eval's sweep harness imports this module back
+    from repro.eval.evaluator import make_evaluator
+
+    eval_fn = make_evaluator(system, eval_episodes, eval_num_envs or num_envs)
+
     @jax.jit
     def run(st):
-        def body(carry, _):
-            st = carry
-            st, metrics = _one_iteration(system, st, st.key)
-            return st, metrics
+        def block(st, _):
+            st, metrics = jax.lax.scan(train_body, st, None, length=eval_every)
+            k_eval, k_next = jax.random.split(st.key)
+            ev = eval_fn(st.train, k_eval)
+            return st._replace(key=k_next), (metrics, ev)
 
-        return jax.lax.scan(body, st, None, length=num_iterations)
+        st, (metrics, evals) = jax.lax.scan(block, st, None, length=num_blocks)
+        # (num_blocks, eval_every, ...) -> (num_iterations, ...)
+        metrics = jax.tree_util.tree_map(
+            lambda x: x.reshape((num_iterations,) + x.shape[2:]), metrics
+        )
+        return st, metrics, evals
 
     return run(st)
 
@@ -221,17 +277,33 @@ def train_distributed(
     num_envs_per_device: int,
     mesh,
     axis: str = "data",
+    eval_episodes: int = 0,
+    eval_num_envs: Optional[int] = None,
 ):
     """shard_map over the mesh data axis: paper's num_executors scaling.
 
     Each device runs its own envs + buffer shard; the system's update must
     pmean gradients over `axis` (systems built with distributed=True do).
     Params start replicated and stay replicated.
+
+    With ``eval_episodes > 0`` every device additionally runs the fused
+    greedy evaluator on the final (replicated) params inside the same SPMD
+    program, and the return becomes (params, metrics, per-device mean eval
+    return of shape (num_devices,)).
     """
     from jax.experimental.shard_map import shard_map
 
     n_dev = mesh.shape[axis]
     keys = jax.random.split(key, n_dev)
+
+    eval_fn = None
+    if eval_episodes > 0:
+        # local import: repro.eval's sweep harness imports this module back
+        from repro.eval.evaluator import make_evaluator
+
+        eval_fn = make_evaluator(
+            system, eval_episodes, eval_num_envs or num_envs_per_device
+        )
 
     def per_device(dev_keys):
         k = dev_keys[0]
@@ -245,15 +317,21 @@ def train_distributed(
         st, metrics = jax.lax.scan(body, st, None, length=num_iterations)
         # return replicated params + per-device mean reward (rank-1 so the
         # data axis can concatenate device results)
-        return st.train.params, jax.tree_util.tree_map(
+        out = st.train.params, jax.tree_util.tree_map(
             lambda x: jnp.mean(x)[None], metrics
         )
+        if eval_fn is not None:
+            k_eval, _ = jax.random.split(st.key)
+            ev = eval_fn(st.train, k_eval)
+            out = out + (jnp.mean(ev.episode_return)[None],)
+        return out
 
+    out_specs = (P(), P(axis)) if eval_fn is None else (P(), P(axis), P(axis))
     fn = shard_map(
         per_device,
         mesh=mesh,
         in_specs=(P(axis),),
-        out_specs=(P(), P(axis)),
+        out_specs=out_specs,
         check_rep=False,
     )
     return jax.jit(fn)(keys)

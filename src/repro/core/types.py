@@ -17,6 +17,19 @@ class Transition(NamedTuple):
     extras: Dict[str, Any] = {}
 
 
+class EvalMetrics(NamedTuple):
+    """Per-episode evaluation results (the currency of ``repro.eval``).
+
+    Every leaf has a leading episode axis E. ``episode_return`` is the team
+    return (mean over agents of the per-agent undiscounted return), matching
+    the cooperative shared-reward convention used by the mixers.
+    """
+
+    episode_return: Any              # (E,) team return per episode
+    agent_returns: Dict[str, Any]    # per-agent (E,) undiscounted returns
+    episode_length: Any              # (E,) steps until termination
+
+
 class TrainState(NamedTuple):
     """Parameters + optimizer state + bookkeeping for a trainer."""
 

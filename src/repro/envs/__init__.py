@@ -13,6 +13,14 @@ REGISTRY = {
     "smax_lite": SmaxLite,
 }
 
+
+def make_env(name: str, **kwargs):
+    """Build a registered environment by name (the sweep/launcher entry)."""
+    if name not in REGISTRY:
+        raise KeyError(f"unknown env {name!r}; registered: {sorted(REGISTRY)}")
+    return REGISTRY[name](**kwargs)
+
+
 __all__ = [
     "TimeStep",
     "EnvSpec",
@@ -25,4 +33,5 @@ __all__ = [
     "SpeakerListener",
     "SmaxLite",
     "REGISTRY",
+    "make_env",
 ]

@@ -1,0 +1,28 @@
+"""Fused, statistically-robust evaluation (`repro.eval`).
+
+  evaluator — jit/vmap greedy evaluator; standalone or interleaved in runners
+  stats     — rliable-style aggregates (mean/median/IQM + bootstrap CIs)
+  sweep     — one system x every registered env -> BENCH_eval.json
+"""
+from repro.eval.evaluator import evaluate, make_evaluator
+from repro.eval.stats import (
+    aggregate,
+    iqm,
+    mean,
+    median,
+    stratified_bootstrap_ci,
+)
+from repro.eval.sweep import evaluate_on_env, run_sweep, to_markdown
+
+__all__ = [
+    "evaluate",
+    "make_evaluator",
+    "aggregate",
+    "iqm",
+    "mean",
+    "median",
+    "stratified_bootstrap_ci",
+    "evaluate_on_env",
+    "run_sweep",
+    "to_markdown",
+]

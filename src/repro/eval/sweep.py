@@ -1,0 +1,141 @@
+"""Scenario-sweep harness: one system x every registered environment.
+
+The marl-jax idiom: a single command evaluates a system across all scenarios
+in ``repro.envs.REGISTRY`` over multiple seeds and reports a per-scenario
+table with robust aggregates (IQM + stratified-bootstrap 95% CI, via
+`repro.eval.stats`) and eval throughput — the measurement backbone every
+speed/scale PR reports against.
+
+Artifacts: ``BENCH_eval.json`` (schema documented in README.md) and a
+markdown table next to it.
+"""
+from __future__ import annotations
+
+import json
+import math
+import time
+from typing import Dict, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.system import train_anakin
+from repro.envs import REGISTRY, make_env
+from repro.eval.evaluator import make_evaluator
+from repro.eval.stats import aggregate
+
+
+def evaluate_on_env(
+    system,
+    seeds: Sequence[int],
+    num_episodes: int,
+    num_envs: int,
+    train_iterations: int = 0,
+    train_num_envs: int = 8,
+) -> Dict[str, object]:
+    """Evaluate one system on its env over `seeds`; returns the JSON cell."""
+    eval_fn = jax.jit(make_evaluator(system, num_episodes, num_envs))
+    horizon = int(system.env.horizon)
+    eff_envs = min(num_envs, num_episodes)
+    steps_per_call = math.ceil(num_episodes / eff_envs) * eff_envs * horizon
+
+    team_scores, agent_scores, lengths, sps = [], {}, [], []
+    for seed in seeds:
+        key = jax.random.key(seed)
+        k_train, k_eval = jax.random.split(key)
+        if train_iterations > 0:
+            st, _ = train_anakin(system, k_train, train_iterations, train_num_envs)
+            train = st.train
+        else:
+            train = system.init_train(k_train)
+
+        metrics = jax.block_until_ready(eval_fn(train, k_eval))  # warm compile
+        t0 = time.perf_counter()
+        metrics = jax.block_until_ready(eval_fn(train, k_eval))
+        sps.append(steps_per_call / (time.perf_counter() - t0))
+
+        team_scores.append(np.asarray(metrics.episode_return))
+        lengths.append(np.asarray(metrics.episode_length))
+        for a, r in metrics.agent_returns.items():
+            agent_scores.setdefault(a, []).append(np.asarray(r))
+
+    team = np.stack(team_scores)  # (num_seeds, num_episodes)
+    return {
+        "returns": team.tolist(),
+        "aggregates": aggregate(team),
+        "per_agent_mean": {
+            a: float(np.mean(np.stack(rs))) for a, rs in agent_scores.items()
+        },
+        "mean_episode_length": float(np.mean(np.stack(lengths))),
+        "steps_per_sec": float(np.median(sps)),
+        "horizon": horizon,
+    }
+
+
+def run_sweep(
+    system_name: str,
+    make_system,
+    env_names: Optional[Sequence[str]] = None,
+    seeds: Sequence[int] = (0, 1, 2),
+    num_episodes: int = 32,
+    num_envs: int = 16,
+    train_iterations: int = 0,
+    out_path: str = "BENCH_eval.json",
+) -> Dict[str, object]:
+    """Sweep `system_name` across envs; write BENCH_eval.json + markdown.
+
+    ``make_system(env) -> System`` builds the system for each scenario.
+    """
+    env_names = list(env_names) if env_names else sorted(REGISTRY)
+    results: Dict[str, object] = {
+        "system": system_name,
+        "seeds": list(seeds),
+        "num_episodes": num_episodes,
+        "num_envs": num_envs,
+        "train_iterations": train_iterations,
+        "envs": {},
+    }
+    for name in env_names:
+        t0 = time.perf_counter()
+        system = make_system(make_env(name))
+        cell = evaluate_on_env(
+            system, seeds, num_episodes, num_envs, train_iterations
+        )
+        results["envs"][name] = cell
+        agg = cell["aggregates"]
+        lo, hi = agg["iqm_ci95"]
+        print(
+            f"{name:>18s}: IQM={agg['iqm']:8.3f} [{lo:.3f}, {hi:.3f}]  "
+            f"mean={agg['mean']:8.3f}  {cell['steps_per_sec']:,.0f} steps/s  "
+            f"({time.perf_counter() - t0:.1f}s)"
+        )
+
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    md_path = out_path.rsplit(".", 1)[0] + ".md"
+    with open(md_path, "w") as f:
+        f.write(to_markdown(results))
+    print(f"wrote {out_path} and {md_path}")
+    return results
+
+
+def to_markdown(results: Dict[str, object]) -> str:
+    """Render the sweep results as a per-scenario markdown table."""
+    lines = [
+        f"# `{results['system']}` evaluation sweep",
+        "",
+        f"{len(results['seeds'])} seeds x {results['num_episodes']} episodes "
+        f"per env, {results['train_iterations']} training iterations.",
+        "",
+        "| env | IQM | 95% CI | mean | median | eval steps/s |",
+        "|---|---|---|---|---|---|",
+    ]
+    for name, cell in results["envs"].items():
+        agg = cell["aggregates"]
+        lo, hi = agg["iqm_ci95"]
+        lines.append(
+            f"| {name} | {agg['iqm']:.3f} | [{lo:.3f}, {hi:.3f}] | "
+            f"{agg['mean']:.3f} | {agg['median']:.3f} | "
+            f"{cell['steps_per_sec']:,.0f} |"
+        )
+    return "\n".join(lines) + "\n"

@@ -64,7 +64,7 @@ def dryrun_pair(
     """
     import dataclasses as _dc
 
-    from repro.distributed.sharding import set_active_rules
+    from repro.distributed.sharding import enter_mesh, set_active_rules
 
     cfg = shape_config(get_config(arch), get_input_shape(shape_name))
     if overrides:
@@ -78,7 +78,7 @@ def dryrun_pair(
     batch_abs = input_specs(cfg, shape, mesh)
     rep = NamedSharding(mesh, P())
 
-    with jax.set_mesh(mesh), set_active_rules(cfg.sharding):
+    with enter_mesh(mesh), set_active_rules(cfg.sharding):
         if shape.kind == "train":
             opt, train_step = make_train_step(cfg)
             opt_abs, _ = abstract_opt_state(cfg, opt, params_abs, mesh)

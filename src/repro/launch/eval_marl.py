@@ -1,0 +1,54 @@
+"""Scenario-sweep evaluation launcher — the measurement half of Block 2.
+
+Runs one registered system across every env in `repro.envs.REGISTRY` (or a
+single named env) with the fused greedy evaluator, and writes the
+``BENCH_eval.json`` artifact: per-env returns over seeds x episodes, robust
+aggregates (IQM + stratified-bootstrap 95% CI), and eval steps/sec.
+
+  PYTHONPATH=src python -m repro.launch.eval_marl --system vdn --env all
+  PYTHONPATH=src python -m repro.launch.eval_marl --system qmix \
+      --env smax_lite --train-iterations 2000 --seeds 0 1 2
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.envs import REGISTRY as ENVS
+from repro.eval.sweep import run_sweep
+from repro.launch.train_marl import SYSTEMS
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--system", choices=sorted(SYSTEMS), default="vdn")
+    p.add_argument(
+        "--env", choices=sorted(ENVS) + ["all"], default="all",
+        help="one registered env, or 'all' for the full registry sweep",
+    )
+    p.add_argument("--seeds", type=int, nargs="+", default=[0, 1, 2])
+    p.add_argument("--eval-episodes", type=int, default=32)
+    p.add_argument("--num-envs", type=int, default=16, help="parallel eval envs")
+    p.add_argument(
+        "--train-iterations", type=int, default=0,
+        help="anakin training iterations per seed before eval (0 = eval "
+        "freshly-initialised params; useful for throughput/pipeline checks)",
+    )
+    p.add_argument("--out", default="BENCH_eval.json")
+    args = p.parse_args()
+
+    env_names = sorted(ENVS) if args.env == "all" else [args.env]
+    make_system = lambda env: SYSTEMS[args.system](env, None)
+    run_sweep(
+        args.system,
+        make_system,
+        env_names=env_names,
+        seeds=args.seeds,
+        num_episodes=args.eval_episodes,
+        num_envs=args.num_envs,
+        train_iterations=args.train_iterations,
+        out_path=args.out,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -54,6 +54,13 @@ def main():
     p.add_argument("--num-executors", type=int, default=2, help="devices (sharded)")
     p.add_argument("--continuous", action="store_true", help="continuous actions (spread)")
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument(
+        "--eval-every", type=int, default=0,
+        help="anakin: run the fused greedy evaluator inside the training jit "
+        "every N iterations (0 = off); sharded: any value > 0 evaluates the "
+        "final params on every device",
+    )
+    p.add_argument("--eval-episodes", type=int, default=32)
     args = p.parse_args()
 
     env_kwargs = {}
@@ -66,23 +73,36 @@ def main():
 
     t0 = time.time()
     if args.runner == "loop":
-        _, _, returns = run_environment_loop(system, key, num_episodes=args.iterations)
-        print(f"episode returns: first={np.mean(returns[:3]):.2f} "
+        _, _, ev = run_environment_loop(system, key, num_episodes=args.iterations)
+        returns = ev.episode_return
+        print(f"episode returns (team): first={np.mean(returns[:3]):.2f} "
               f"last={np.mean(returns[-3:]):.2f}")
     elif args.runner == "anakin":
-        st, metrics = train_anakin(system, key, args.iterations, args.num_envs)
+        if args.eval_every > 0:
+            st, metrics, evals = train_anakin(
+                system, key, args.iterations, args.num_envs,
+                eval_every=args.eval_every, eval_episodes=args.eval_episodes,
+            )
+            ev_returns = np.asarray(evals.episode_return).mean(axis=-1)
+            print("greedy eval return (team), per eval point:",
+                  np.array2string(ev_returns, precision=3))
+        else:
+            st, metrics = train_anakin(system, key, args.iterations, args.num_envs)
         r = np.asarray(metrics["reward"])
         k = max(len(r) // 10, 1)
         print(f"reward/step: first-10%={r[:k].mean():.3f} last-10%={r[-k:].mean():.3f}")
     else:
-        mesh = jax.make_mesh(
-            (args.num_executors,), ("data",),
-            axis_types=(jax.sharding.AxisType.Auto,),
+        from repro.launch.mesh import make_auto_mesh
+
+        mesh = make_auto_mesh((args.num_executors,), ("data",))
+        out = train_distributed(
+            system, key, args.iterations, args.num_envs, mesh,
+            eval_episodes=args.eval_episodes if args.eval_every > 0 else 0,
         )
-        params, metrics = train_distributed(
-            system, key, args.iterations, args.num_envs, mesh
-        )
+        params, metrics = out[0], out[1]
         print("per-executor reward:", np.asarray(metrics["reward"]).ravel())
+        if args.eval_every > 0:
+            print("per-executor greedy eval return:", np.asarray(out[2]).ravel())
     print(f"wall time: {time.time() - t0:.1f}s  "
           f"({args.system} on {args.env}, runner={args.runner})")
 

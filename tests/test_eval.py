@@ -1,0 +1,167 @@
+"""repro.eval: evaluator determinism, robust stats, fused eval cadence."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.system import train_anakin
+from repro.core.types import EvalMetrics
+from repro.envs import MatrixGame, SmaxLite, make_env
+from repro.eval import (
+    aggregate,
+    evaluate,
+    iqm,
+    make_evaluator,
+    mean,
+    median,
+    stratified_bootstrap_ci,
+)
+from repro.systems.offpolicy import OffPolicyConfig
+from repro.systems.vdn import make_vdn
+
+CFG = OffPolicyConfig(buffer_capacity=2_000, min_replay=50, batch_size=16)
+
+
+def _vdn(env):
+    return make_vdn(env, CFG)
+
+
+# ------------------------------------------------------------- evaluator
+
+
+def test_evaluator_deterministic_bitwise():
+    """Same (params, key) -> bitwise-equal returns across calls."""
+    system = _vdn(MatrixGame(horizon=10))
+    train = system.init_train(jax.random.key(1))
+    key = jax.random.key(7)
+    m1 = evaluate(system, train, key, num_episodes=12, num_envs=4)
+    m2 = evaluate(system, train, key, num_episodes=12, num_envs=4)
+    assert m1.episode_return.shape == (12,)
+    np.testing.assert_array_equal(
+        np.asarray(m1.episode_return), np.asarray(m2.episode_return)
+    )
+    for a in m1.agent_returns:
+        np.testing.assert_array_equal(
+            np.asarray(m1.agent_returns[a]), np.asarray(m2.agent_returns[a])
+        )
+
+
+def test_evaluator_accepts_bare_params_and_trims_episodes():
+    system = _vdn(MatrixGame(horizon=10))
+    train = system.init_train(jax.random.key(1))
+    key = jax.random.key(0)
+    m_train = evaluate(system, train, key, num_episodes=7, num_envs=4)
+    m_params = evaluate(system, train.params, key, num_episodes=7, num_envs=4)
+    # 7 episodes from 4 envs = 2 rounds trimmed to 7
+    assert m_params.episode_return.shape == (7,)
+    np.testing.assert_array_equal(
+        np.asarray(m_train.episode_return), np.asarray(m_params.episode_return)
+    )
+
+
+def test_evaluator_masks_early_termination():
+    """smax-lite episodes can end before the horizon; rewards stop counting."""
+    system = _vdn(SmaxLite(num_agents=3))
+    train = system.init_train(jax.random.key(3))
+    m = evaluate(system, train, jax.random.key(0), num_episodes=6, num_envs=3)
+    lengths = np.asarray(m.episode_length)
+    assert (lengths >= 1).all() and (lengths <= system.env.horizon).all()
+    assert np.isfinite(np.asarray(m.episode_return)).all()
+
+
+def test_make_env_registry_roundtrip():
+    env = make_env("matrix_game", horizon=5)
+    assert env.horizon == 5
+    with pytest.raises(KeyError):
+        make_env("not_an_env")
+
+
+# ----------------------------------------------------------------- stats
+
+
+def test_iqm_hand_computed():
+    # 1..8: drop the two lowest and two highest -> mean(3,4,5,6) = 4.5
+    assert iqm([1, 2, 3, 4, 5, 6, 7, 8]) == pytest.approx(4.5)
+    # outlier-robust where the mean is not
+    assert iqm([1, 2, 3, 4, 5, 6, 7, 1000]) == pytest.approx(4.5)
+    assert mean([1, 2, 3, 4, 5, 6, 7, 1000]) == pytest.approx(128.5)
+    # fewer than 4 scores falls back to the plain mean
+    assert iqm([2.0, 4.0]) == pytest.approx(3.0)
+    assert median([[1, 2], [3, 4]]) == pytest.approx(2.5)
+
+
+def test_bootstrap_ci_constant_and_ordering():
+    # constant scores -> degenerate CI exactly at the value
+    lo, hi = stratified_bootstrap_ci(np.full((3, 8), 5.0), num_resamples=100)
+    assert lo == pytest.approx(5.0) and hi == pytest.approx(5.0)
+    # varied scores -> non-degenerate interval that brackets the statistic
+    rng = np.random.default_rng(0)
+    scores = rng.normal(0.0, 1.0, size=(4, 64))
+    lo, hi = stratified_bootstrap_ci(scores, num_resamples=500, seed=1)
+    assert lo < iqm(scores) < hi
+    # deterministic for a fixed bootstrap seed
+    assert (lo, hi) == stratified_bootstrap_ci(scores, num_resamples=500, seed=1)
+
+
+def test_aggregate_report_schema():
+    rep = aggregate(np.arange(16, dtype=float).reshape(2, 8), num_resamples=50)
+    for k in ("mean", "median", "iqm", "std", "iqm_ci95", "mean_ci95"):
+        assert k in rep
+    assert rep["num_seeds"] == 2 and rep["num_episodes"] == 8
+    lo, hi = rep["iqm_ci95"]
+    assert lo <= rep["iqm"] <= hi
+
+
+# ------------------------------------------------- fused eval in the runners
+
+
+def test_train_anakin_eval_cadence_smoke():
+    """--eval-every through the fused jit: right shapes, finite values."""
+    system = _vdn(MatrixGame(horizon=10))
+    st, metrics, evals = train_anakin(
+        system, jax.random.key(0), 60, num_envs=4,
+        eval_every=20, eval_episodes=8, eval_num_envs=4,
+    )
+    assert isinstance(evals, EvalMetrics)
+    assert evals.episode_return.shape == (3, 8)  # 3 eval points x 8 episodes
+    assert metrics["reward"].shape == (60,)  # training metrics still flat
+    assert np.isfinite(np.asarray(evals.episode_return)).all()
+    assert set(evals.agent_returns) == set(system.spec.agent_ids)
+
+
+def test_train_anakin_interleaved_matches_standalone():
+    """The in-jit evaluator reproduces the standalone one bit-for-bit."""
+    system = _vdn(MatrixGame(horizon=10))
+    n = 40
+    _, _, evals = train_anakin(
+        system, jax.random.key(0), n, num_envs=4,
+        eval_every=n, eval_episodes=8, eval_num_envs=4,
+    )
+    # re-run training without eval to recover the same train state + key
+    st, _ = train_anakin(system, jax.random.key(0), n, num_envs=4)
+    k_eval = jax.random.split(st.key)[0]
+    standalone = evaluate(system, st.train, k_eval, num_episodes=8, num_envs=4)
+    np.testing.assert_allclose(
+        np.asarray(evals.episode_return)[0],
+        np.asarray(standalone.episode_return),
+        rtol=1e-6,
+    )
+
+
+def test_train_anakin_eval_every_must_divide():
+    system = _vdn(MatrixGame(horizon=10))
+    with pytest.raises(ValueError):
+        train_anakin(system, jax.random.key(0), 50, 4, eval_every=7)
+
+
+def test_make_evaluator_composes_under_jit():
+    """The eval fn is a pure function usable inside a larger jit."""
+    system = _vdn(MatrixGame(horizon=10))
+    eval_fn = make_evaluator(system, num_episodes=4, num_envs=4)
+    train = system.init_train(jax.random.key(1))
+
+    @jax.jit
+    def wrapped(train, key):
+        return eval_fn(train, key).episode_return.mean()
+
+    out = wrapped(train, jax.random.key(0))
+    assert np.isfinite(float(out))

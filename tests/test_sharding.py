@@ -15,10 +15,17 @@ from repro.distributed.sharding import (
 # can't exercise divisibility. Use an abstract mesh instead.
 
 
+def abstract_mesh(sizes, names):
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.sharding.AbstractMesh(
+            sizes, names, axis_types=(jax.sharding.AxisType.Auto,) * len(names)
+        )
+    # older jax: AbstractMesh takes ((name, size), ...) pairs
+    return jax.sharding.AbstractMesh(tuple(zip(names, sizes)))
+
+
 def make_mesh():
-    return jax.sharding.AbstractMesh(
-        (2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-    )
+    return abstract_mesh((2, 4), ("data", "model"))
 
 
 def test_basic_mapping():
@@ -28,10 +35,7 @@ def test_basic_mapping():
 
 
 def test_batch_uses_pod_and_data():
-    mesh = jax.sharding.AbstractMesh(
-        (2, 2, 4), ("pod", "data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 3,
-    )
+    mesh = abstract_mesh((2, 2, 4), ("pod", "data", "model"))
     spec = logical_to_spec(("batch", None, "embed"), DEFAULT_RULES, mesh)
     assert spec == P(("pod", "data"))
 

@@ -39,12 +39,17 @@ def test_faithful_python_loop_runs():
 
     cfg = dataclasses.replace(FAST_CFG, min_replay=20)  # 4 eps x 10 steps
     system = make_madqn(env, cfg)
-    train, buffer, returns = run_environment_loop(
+    train, buffer, ev = run_environment_loop(
         system, jax.random.key(0), num_episodes=4
     )
-    assert len(returns) == 4
+    assert len(ev.episode_return) == 4
     assert int(train.steps) > 0  # trainer actually updated
-    assert all(np.isfinite(r) for r in returns)
+    assert np.isfinite(ev.episode_return).all()
+    # per-agent returns carry one entry per agent per episode
+    assert set(ev.agent_returns) == set(system.spec.agent_ids)
+    for r in ev.agent_returns.values():
+        assert r.shape == (4,) and np.isfinite(r).all()
+    assert (ev.episode_length == env.horizon).all()
 
 
 def test_anakin_metrics_finite():
