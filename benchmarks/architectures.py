@@ -52,17 +52,20 @@ def bench(fast: bool = False):
             )
         )
 
-    # speaker-listener with MAPPO (asymmetric agents need per-agent nets)
+    # speaker-listener with MAPPO (asymmetric agents need per-agent nets),
+    # through the same unified Anakin runner as the off-policy systems
     from repro.systems.onpolicy import PPOConfig, make_mappo
 
     sl = SpeakerListener()
-    ppo = make_mappo(sl, PPOConfig(rollout_len=64, shared_weights=False))
+    rollout_len = 64
+    ppo = make_mappo(sl, PPOConfig(rollout_len=rollout_len, shared_weights=False))
     updates = 30 if fast else 400
     t0 = time.time()
-    train, metrics = ppo["train"](jax.random.key(0), updates, 16)
+    st, metrics = train_anakin(ppo, jax.random.key(0), updates * rollout_len, 16)
+    jax.block_until_ready(st.train.params)
     dt = time.time() - t0
     r = np.asarray(metrics["reward"])
-    k = max(updates // 10, 1)
+    k = max(len(r) // 10, 1)
     rows.append(
         (
             "speaker_listener/mappo",

@@ -3,34 +3,47 @@
 The paper's claim: adding the communication module to recurrent MADQN lets
 the system solve the riddle (evaluation return -> ~1.0 with 3 agents) while
 the comm-less ablation plateaus near the tell-immediately baseline.
+
+DIAL runs through the unified System runner (train_anakin) and the fused
+greedy evaluator, like every other system.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 
 import jax
 import numpy as np
 
+from repro.core.system import train_anakin
 from repro.envs import SwitchGame
-from repro.systems.dial import DialConfig, make_dial, train_dial
+from repro.eval import evaluate
+from repro.systems.dial import DialConfig, make_dial
 
 
 def bench(fast: bool = False):
     env = SwitchGame(num_agents=3)
     updates = 150 if fast else 2_000
+    rollout_len = env.horizon  # one episode per env per update
+    num_envs = 32
     rows = []
     variants = (
-        ("dial", DialConfig(use_comm=True, batch_episodes=32)),
-        ("rial", DialConfig(use_comm=True, batch_episodes=32, protocol="rial")),
-        ("no_comm", DialConfig(use_comm=False, batch_episodes=32)),
+        ("dial", DialConfig(use_comm=True)),
+        ("rial", DialConfig(use_comm=True, protocol="rial")),
+        ("no_comm", DialConfig(use_comm=False)),
     )
     for name, cfg in variants:
+        system = make_dial(env, cfg)
         t0 = time.time()
-        train, metrics, system = train_dial(env, cfg, jax.random.key(0), updates)
+        st, metrics = train_anakin(
+            system, jax.random.key(0), updates * rollout_len, num_envs
+        )
+        jax.block_until_ready(st.train.params)
         dt = time.time() - t0
-        ret = float(system["evaluate"](train, jax.random.key(99), batch=256))
-        r = np.asarray(metrics["return"])
+        ev = evaluate(
+            system, st.train, jax.random.key(99), num_episodes=256, num_envs=64
+        )
+        ret = float(np.asarray(ev.episode_return).mean())
+        r = np.asarray(metrics["reward"]).reshape(updates, rollout_len)
         rows.append(
             (
                 f"switch_game/{name}",

@@ -1,6 +1,8 @@
-"""Distributed on-policy training: IPPO on spread, then the sharded
-MADQN executor scale-out (the paper's num_executors experiment) — run in a
-subprocess so the host platform can expose 4 devices.
+"""Distributed on-policy training: IPPO on spread through the unified
+System runners — fused Anakin first, then the sharded executor scale-out
+(the paper's num_executors experiment, now available to the on-policy
+family too) — run in a subprocess so the host platform can expose 4
+devices.
 
   PYTHONPATH=src python examples/distributed_ippo.py
 """
@@ -12,30 +14,31 @@ import textwrap
 import jax
 import numpy as np
 
-from repro.envs import Spread
-from repro.systems.onpolicy import PPOConfig, make_ippo
+from repro.core.system import train_anakin
+from repro.envs import make_env
+from repro.systems import make_system
 
 print("== IPPO (fused rollout+update, 16 envs) ==")
-env = Spread(num_agents=3, horizon=25)
-system = make_ippo(env, PPOConfig(rollout_len=64, epochs=2, num_minibatches=2))
-train, metrics = system["train"](jax.random.key(0), num_updates=120, num_envs=16)
+env = make_env("spread", num_agents=3, horizon=25)
+system = make_system("ippo", env, rollout_len=64, epochs=2, num_minibatches=2)
+st, metrics = train_anakin(system, jax.random.key(0), 120 * 64, num_envs=16)
 r = np.asarray(metrics["reward"])
-print(f"reward/step: first10={r[:10].mean():.3f} last10={r[-10:].mean():.3f}")
+k = max(len(r) // 10, 1)
+print(f"reward/step: first10%={r[:k].mean():.3f} last10%={r[-k:].mean():.3f}")
 
-print("== sharded executors (4 devices via shard_map) ==")
+print("== sharded IPPO executors (4 devices via shard_map) ==")
 code = """
 import jax, numpy as np
-from repro.envs import Spread
-from repro.systems.madqn import make_madqn
-from repro.systems.offpolicy import OffPolicyConfig
+from repro.envs import make_env
+from repro.systems import make_system
 from repro.core.system import train_distributed
 from repro.launch.mesh import make_auto_mesh
 
 mesh = make_auto_mesh((4,), ("data",))
-cfg = OffPolicyConfig(buffer_capacity=20000, min_replay=500, batch_size=64,
-                      distributed_axis="data")
-params, metrics = train_distributed(make_madqn(Spread(num_agents=3), cfg),
-                                    jax.random.key(0), 1500, 8, mesh)
+system = make_system("ippo", make_env("spread", num_agents=3),
+                     distributed_axis="data",
+                     rollout_len=64, epochs=2, num_minibatches=2)
+params, metrics = train_distributed(system, jax.random.key(0), 1500, 8, mesh)
 print("per-executor mean reward:", np.round(np.asarray(metrics["reward"]).ravel(), 3))
 """
 env_vars = dict(os.environ)

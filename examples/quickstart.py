@@ -1,8 +1,10 @@
 """Quickstart — the paper's Block 1 + Block 2 in JAX-Mava form.
 
-Builds a MADQN system, shows the faithful executor-environment loop, then
-launches the same system fused (Anakin) — the two-line scale-up that
-replaces the Launchpad program graph.
+Builds a system from the registry (`make_system` — any of the nine
+algorithm families behind one constructor), shows the faithful
+executor-environment loop, then launches the *same* system fused
+(Anakin) — the two-line scale-up that replaces the Launchpad program
+graph.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,22 +12,20 @@ import jax
 import numpy as np
 
 from repro.core.system import run_environment_loop, train_anakin
-from repro.envs import MatrixGame
-from repro.systems.madqn import make_madqn
-from repro.systems.offpolicy import OffPolicyConfig
+from repro.envs import make_env
+from repro.systems import make_system
 
-# ---- Block 2 analogue: build the system (env factory + network config) ----
-env = MatrixGame(horizon=10)
-system = make_madqn(
+# ---- Block 2 analogue: build the system from the registry ----
+env = make_env("matrix_game", horizon=10)
+system = make_system(
+    "madqn",
     env,
-    OffPolicyConfig(
-        hidden_sizes=(64, 64),
-        buffer_capacity=5_000,
-        min_replay=100,
-        batch_size=32,
-        eps_decay_steps=2_000,
-        learning_rate=1e-3,
-    ),
+    hidden_sizes=(64, 64),
+    buffer_capacity=5_000,
+    min_replay=100,
+    batch_size=32,
+    eps_decay_steps=2_000,
+    learning_rate=1e-3,
 )
 
 # ---- Block 1 analogue: the executor-environment loop (faithful, python) ----
@@ -47,3 +47,10 @@ print("greedy eval return per 1000 iters:",
       np.asarray(evals.episode_return).mean(axis=-1).round(2))
 assert r[-200:].mean() > r[:200].mean(), "system failed to learn"
 print("learned the climbing game.")
+
+# ---- the same two lines work for the on-policy flagship ----
+print("== same runner, flagship system: ippo on the same env ==")
+ippo = make_system("ippo", env, rollout_len=32, num_minibatches=2)
+st, metrics = train_anakin(ippo, jax.random.key(0), num_iterations=3200, num_envs=8)
+r = np.asarray(metrics["reward"])
+print(f"ippo reward/step: first200={r[:200].mean():.2f}  last200={r[-200:].mean():.2f}")

@@ -1,8 +1,9 @@
 """Paper Fig. 4 (top): DIAL communication on the switch riddle.
 
-Trains recurrent Q-agents with the differentiable channel, then the
-no-communication ablation, and prints the evaluation returns (hard channel,
-decentralised execution).
+Trains recurrent Q-agents with the differentiable channel through the
+unified Anakin runner, then the no-communication ablation, and prints the
+fused greedy-evaluator returns (hard channel, decentralised execution —
+`repro.eval.evaluate` with `training=False` thresholds the DRU).
 
   PYTHONPATH=src python examples/switch_game_dial.py [--updates 800]
 """
@@ -11,8 +12,10 @@ import argparse
 import jax
 import numpy as np
 
+from repro.core.system import train_anakin
 from repro.envs import SwitchGame
-from repro.systems.dial import DialConfig, train_dial
+from repro.eval import evaluate
+from repro.systems.dial import DialConfig, make_dial
 
 p = argparse.ArgumentParser()
 p.add_argument("--updates", type=int, default=800)
@@ -20,11 +23,15 @@ p.add_argument("--agents", type=int, default=3)
 args = p.parse_args()
 
 env = SwitchGame(num_agents=args.agents)
+rollout_len = env.horizon  # one episode per env per update (DialConfig default)
 for use_comm in (True, False):
     name = "DIAL (learned channel)" if use_comm else "no communication"
-    cfg = DialConfig(use_comm=use_comm, batch_episodes=32)
-    train, metrics, system = train_dial(env, cfg, jax.random.key(0), args.updates)
-    r = np.asarray(metrics["return"])
-    ev = float(system["evaluate"](train, jax.random.key(99), batch=256))
-    print(f"{name:24s} train_return(last 50): {r[-50:].mean():+.3f}   "
-          f"eval_return (hard bits): {ev:+.3f}")
+    system = make_dial(env, DialConfig(use_comm=use_comm))
+    st, metrics = train_anakin(
+        system, jax.random.key(0), args.updates * rollout_len, num_envs=32
+    )
+    r = np.asarray(metrics["reward"]).reshape(args.updates, rollout_len)
+    ev = evaluate(system, st.train, jax.random.key(99), num_episodes=256, num_envs=64)
+    print(f"{name:24s} train_reward/step(last 50 updates): "
+          f"{r[-50:].mean():+.3f}   "
+          f"eval_return (hard bits): {float(np.asarray(ev.episode_return).mean()):+.3f}")

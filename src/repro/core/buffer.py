@@ -58,3 +58,54 @@ def buffer_sample(state: BufferState, key, batch_size: int):
 
 def buffer_can_sample(state: BufferState, min_size: int):
     return state.size >= min_size
+
+
+# --------------------------------------------------------------------------
+# On-policy rollout accumulator: the second experience regime of the dataset
+# protocol. Where the replay table above stores i.i.d.-sampled rows, this
+# stores a time-major (rollout_len, num_envs, ...) trajectory that the
+# trainer consumes whole (GAE / BPTT need the time axis) and then resets —
+# the `rollout_len`-gated consume-and-reset contract used by PPO and DIAL.
+
+
+class RolloutState(NamedTuple):
+    storage: Any          # pytree, leaves (rollout_len, num_envs, ...)
+    t: jnp.ndarray        # () int32 — next write slot (t == T means full)
+
+
+def rollout_init(example_item, rollout_len: int, num_envs: int) -> RolloutState:
+    """example_item: a pytree with per-item shapes (no time/env dims)."""
+    storage = jax.tree_util.tree_map(
+        lambda x: jnp.zeros(
+            (rollout_len, num_envs) + jnp.shape(x), jnp.asarray(x).dtype
+        ),
+        example_item,
+    )
+    return RolloutState(storage=storage, t=jnp.zeros((), jnp.int32))
+
+
+def rollout_add(state: RolloutState, items) -> RolloutState:
+    """Append one vectorised step (leaves (num_envs, ...)) at the cursor.
+
+    Writes past the end are dropped (JAX out-of-bounds scatter semantics),
+    so a full rollout is safe until the trainer consumes and resets it.
+    """
+    storage = jax.tree_util.tree_map(
+        lambda s, x: s.at[state.t].set(x.astype(s.dtype)), state.storage, items
+    )
+    return RolloutState(storage=storage, t=state.t + 1)
+
+
+def rollout_ready(state: RolloutState, rollout_len: int):
+    """True once the accumulator holds a complete rollout."""
+    return state.t >= rollout_len
+
+
+def rollout_take(state: RolloutState):
+    """The full time-major trajectory (leaves (rollout_len, num_envs, ...))."""
+    return state.storage
+
+
+def rollout_reset(state: RolloutState) -> RolloutState:
+    """Consume: rewind the cursor (storage is overwritten in place)."""
+    return RolloutState(storage=state.storage, t=jnp.zeros((), jnp.int32))

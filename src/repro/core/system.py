@@ -33,24 +33,41 @@ from repro.envs.api import StepType
 
 @dataclasses.dataclass(frozen=True)
 class System:
-    """A full MARL algorithm specification (executor + trainer + dataset)."""
+    """A full MARL algorithm specification (executor + trainer + dataset).
+
+    The dataset half is an *experience-collection protocol* that covers both
+    regimes:
+
+      * replay (MADQN/VDN/QMIX/MADDPG): ``observe`` writes per-step rows
+        into a circular table, ``can_sample`` gates on fill, ``update``
+        samples i.i.d. minibatches and returns the buffer unchanged;
+      * rollout (IPPO/MAPPO/DIAL): ``observe`` appends to a time-major
+        ``rollout_len`` accumulator, ``can_sample`` fires exactly when the
+        rollout is complete, and ``update`` consumes the whole trajectory
+        and returns the buffer *reset* (consume-and-reset).
+
+    Executors may thread act-time side outputs (log-probs, values, outgoing
+    messages) to the trainer by returning them as the third element of
+    ``select_actions``; the runners store them in ``Transition.extras``.
+    """
 
     env: Any
     spec: Any
     # trainer
     init_train: Callable[[Any], TrainState]
-    update: Callable[[TrainState, Any, Any], tuple]  # (train, batch, key) -> (train, metrics)
+    update: Callable  # (train, buffer, key) -> (train, buffer, metrics)
     # executor
-    select_actions: Callable  # (train, obs, carry, key, training) -> (actions, carry)
+    select_actions: Callable  # (train, obs, state, carry, key, training) -> (actions, carry, extras)
     initial_carry: Callable   # (batch_shape) -> carry
     # dataset
-    init_buffer: Callable[[], Any]
+    init_buffer: Callable[[int], Any]  # (num_envs) -> buffer_state
     observe: Callable         # (buffer, transition_batch) -> buffer
-    sample: Callable          # (buffer, key) -> batch
-    can_sample: Callable      # (buffer,) -> bool scalar
+    can_sample: Callable      # (buffer,) -> bool scalar (ready to update)
     # schedule
     updates_per_step: int = 1
     name: str = "system"
+    # action-space support declared by the algorithm ("discrete"/"continuous")
+    action_space: str = "discrete"
 
 
 # ------------------------------------------------------ faithful python loop
@@ -75,7 +92,7 @@ def run_environment_loop(
     if train_state is None:
         train_state = system.init_train(k_init)
     if buffer_state is None:
-        buffer_state = system.init_buffer()
+        buffer_state = system.init_buffer(1)
 
     select = jax.jit(functools.partial(system.select_actions, training=training))
     observe = jax.jit(system.observe)
@@ -96,24 +113,29 @@ def run_environment_loop(
         while int(ts.step_type) != StepType.LAST:
             key, k_act, k_upd = jax.random.split(key, 3)
             obs = ts.observation
-            actions, carry = select(train_state, obs, carry, k_act)
+            gs = gstate(env_state)
+            actions, carry, extras = select(train_state, obs, gs, carry, k_act)
             new_env_state, new_ts = step_env(env_state, actions)
-            # make an observation for each agent (adder -> replay table)
-            tr = Transition(
-                obs=obs,
-                actions=actions,
-                rewards=new_ts.reward,
-                discount=new_ts.discount,
-                next_obs=new_ts.observation,
-                state=gstate(env_state),
-                next_state=gstate(new_env_state),
-                extras={},
-            )
-            tr_b = jax.tree_util.tree_map(lambda x: jnp.asarray(x)[None], tr)
-            buffer_state = observe(buffer_state, tr_b)
-            # update the trainer (and with it the executor's policy networks)
-            if training and bool(system.can_sample(buffer_state)):
-                train_state, _ = update(train_state, buffer_state, k_upd)
+            if training:
+                # make an observation for each agent (adder -> dataset)
+                tr = Transition(
+                    obs=obs,
+                    actions=actions,
+                    rewards=new_ts.reward,
+                    discount=new_ts.discount,
+                    next_obs=new_ts.observation,
+                    state=gs,
+                    next_state=gstate(new_env_state),
+                    extras=extras,
+                    step_type=ts.step_type,
+                )
+                tr_b = jax.tree_util.tree_map(lambda x: jnp.asarray(x)[None], tr)
+                buffer_state = observe(buffer_state, tr_b)
+                # update the trainer (and the executor's policy networks)
+                if bool(system.can_sample(buffer_state)):
+                    train_state, buffer_state, _ = update(
+                        train_state, buffer_state, k_upd
+                    )
             env_state, ts = new_env_state, new_ts
             for a in ids:
                 ep_return[a] += float(new_ts.reward[a])
@@ -141,8 +163,9 @@ def _one_iteration(system: System, carry, key):
     env = system.env
 
     obs = st.timestep.observation
-    actions, new_carry = system.select_actions(
-        st.train, obs, st.carry, k_act, training=True
+    gs = jax.vmap(env.global_state)(st.env_state)
+    actions, new_carry, extras = system.select_actions(
+        st.train, obs, gs, st.carry, k_act, training=True
     )
     new_env_state, new_ts = jax.vmap(env.step)(st.env_state, actions)
     tr = Transition(
@@ -151,9 +174,10 @@ def _one_iteration(system: System, carry, key):
         rewards=new_ts.reward,
         discount=new_ts.discount,
         next_obs=new_ts.observation,
-        state=jax.vmap(env.global_state)(st.env_state),
+        state=gs,
         next_state=jax.vmap(env.global_state)(new_env_state),
-        extras={},
+        extras=extras,
+        step_type=st.timestep.step_type,
     )
     buffer = system.observe(st.buffer, tr)
 
@@ -170,18 +194,18 @@ def _one_iteration(system: System, carry, key):
     fresh_carry = system.initial_carry((num_envs,))
     new_carry = jax.tree_util.tree_map(sel, fresh_carry, new_carry)
 
-    # trainer update(s), gated on buffer fill
+    # trainer update(s), gated on buffer readiness (replay fill, or a
+    # complete rollout — in which case update consumes and resets it)
     def do_update(args):
         train, buf = args
-        t = train
         for i in range(system.updates_per_step):
-            t, _ = system.update(t, buf, jax.random.fold_in(k_upd, i))
-        return t
+            train, buf, _ = system.update(train, buf, jax.random.fold_in(k_upd, i))
+        return train, buf
 
-    train = jax.lax.cond(
+    train, buffer = jax.lax.cond(
         system.can_sample(buffer),
         do_update,
-        lambda args: args[0],
+        lambda args: args,
         (st.train, buffer),
     )
 
@@ -195,7 +219,7 @@ def init_system_state(system: System, key, num_envs: int) -> SystemState:
     env_state, ts = jax.vmap(system.env.reset)(jax.random.split(k_env, num_envs))
     return SystemState(
         train=system.init_train(k_train),
-        buffer=system.init_buffer(),
+        buffer=system.init_buffer(num_envs),
         env_state=env_state,
         timestep=ts,
         carry=system.initial_carry((num_envs,)),

@@ -5,7 +5,16 @@ from typing import Any, Dict, NamedTuple
 
 
 class Transition(NamedTuple):
-    """One multi-agent environment transition (the replay-table row)."""
+    """One multi-agent environment transition (the dataset row).
+
+    ``extras`` is the executor's side-channel: whatever ``select_actions``
+    returns as its third output is stored here verbatim (PPO's behaviour
+    log-probs and values, DIAL's outgoing messages, ...), so on-policy
+    trainers can consume act-time quantities without recomputation.
+    ``step_type`` is the StepType of the observation at t — FIRST marks
+    episode starts, which recurrent trainers use to reset their cores when
+    a stored trajectory crosses an auto-reset boundary.
+    """
 
     obs: Dict[str, Any]        # per-agent observation at t
     actions: Dict[str, Any]    # per-agent action taken at t
@@ -15,6 +24,7 @@ class Transition(NamedTuple):
     state: Any                 # global state at t (centralised training)
     next_state: Any            # global state at t+1
     extras: Dict[str, Any] = {}
+    step_type: Any = ()        # StepType at t (() = not recorded)
 
 
 class EvalMetrics(NamedTuple):

@@ -63,8 +63,9 @@ def _episode_batch(system, train: TrainState, key, num_envs: int, horizon: int):
 
     def step(sc, k_act):
         env_state, ts, carry, done, rets, length = sc
-        actions, carry = system.select_actions(
-            train, ts.observation, carry, k_act, training=False
+        gs = jax.vmap(env.global_state)(env_state)
+        actions, carry, _ = system.select_actions(
+            train, ts.observation, gs, carry, k_act, training=False
         )
         env_state, new_ts = jax.vmap(env.step)(env_state, actions)
         alive = ~done

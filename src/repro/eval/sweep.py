@@ -1,10 +1,15 @@
-"""Scenario-sweep harness: one system x every registered environment.
+"""Scenario-sweep harness: systems x environments, registry-driven.
 
-The marl-jax idiom: a single command evaluates a system across all scenarios
-in ``repro.envs.REGISTRY`` over multiple seeds and reports a per-scenario
-table with robust aggregates (IQM + stratified-bootstrap 95% CI, via
-`repro.eval.stats`) and eval throughput — the measurement backbone every
-speed/scale PR reports against.
+The marl-jax idiom: a single command evaluates any set of registered
+systems across all scenarios in ``repro.envs.REGISTRY`` over multiple
+seeds and reports per-cell robust aggregates (IQM + stratified-bootstrap
+95% CI, via `repro.eval.stats`) and eval throughput — the measurement
+backbone every speed/scale PR reports against.
+
+Every (system, env) cell of the support matrix is emitted: runnable cells
+carry scores, incompatible ones carry the spec-driven reason (from
+``repro.systems.registry.compatibility``), so the artifact doubles as the
+library's compatibility matrix.
 
 Artifacts: ``BENCH_eval.json`` (schema documented in README.md) and a
 markdown table next to it.
@@ -20,9 +25,11 @@ import jax
 import numpy as np
 
 from repro.core.system import train_anakin
-from repro.envs import REGISTRY, make_env
+from repro.envs import REGISTRY as ENV_REGISTRY
 from repro.eval.evaluator import make_evaluator
 from repro.eval.stats import aggregate
+from repro.systems.registry import REGISTRY as SYS_REGISTRY
+from repro.systems.registry import compatibility, make_pair
 
 
 def evaluate_on_env(
@@ -61,6 +68,7 @@ def evaluate_on_env(
 
     team = np.stack(team_scores)  # (num_seeds, num_episodes)
     return {
+        "compatible": True,
         "returns": team.tolist(),
         "aggregates": aggregate(team),
         "per_agent_mean": {
@@ -73,42 +81,57 @@ def evaluate_on_env(
 
 
 def run_sweep(
-    system_name: str,
-    make_system,
+    system_names: Optional[Sequence[str]] = None,
     env_names: Optional[Sequence[str]] = None,
     seeds: Sequence[int] = (0, 1, 2),
     num_episodes: int = 32,
     num_envs: int = 16,
     train_iterations: int = 0,
     out_path: str = "BENCH_eval.json",
+    system_overrides: Optional[dict] = None,
 ) -> Dict[str, object]:
-    """Sweep `system_name` across envs; write BENCH_eval.json + markdown.
+    """Sweep systems x envs; write BENCH_eval.json + markdown.
 
-    ``make_system(env) -> System`` builds the system for each scenario.
+    Incompatible cells are recorded with their reason rather than skipped
+    silently, so the artifact carries the full support matrix.
+    ``system_overrides`` maps system name -> config-field overrides (used
+    by tests/CI to shrink replay sizes etc.).
     """
-    env_names = list(env_names) if env_names else sorted(REGISTRY)
+    system_names = list(system_names) if system_names else sorted(SYS_REGISTRY)
+    env_names = list(env_names) if env_names else sorted(ENV_REGISTRY)
+    overrides = system_overrides or {}
     results: Dict[str, object] = {
-        "system": system_name,
         "seeds": list(seeds),
         "num_episodes": num_episodes,
         "num_envs": num_envs,
         "train_iterations": train_iterations,
-        "envs": {},
+        "systems": {},
     }
-    for name in env_names:
-        t0 = time.perf_counter()
-        system = make_system(make_env(name))
-        cell = evaluate_on_env(
-            system, seeds, num_episodes, num_envs, train_iterations
-        )
-        results["envs"][name] = cell
-        agg = cell["aggregates"]
-        lo, hi = agg["iqm_ci95"]
-        print(
-            f"{name:>18s}: IQM={agg['iqm']:8.3f} [{lo:.3f}, {hi:.3f}]  "
-            f"mean={agg['mean']:8.3f}  {cell['steps_per_sec']:,.0f} steps/s  "
-            f"({time.perf_counter() - t0:.1f}s)"
-        )
+    for sys_name in system_names:
+        per_env: Dict[str, object] = {}
+        results["systems"][sys_name] = {"envs": per_env}
+        for env_name in env_names:
+            t0 = time.perf_counter()
+            reason = compatibility(sys_name, env_name)
+            if reason is not None:
+                per_env[env_name] = {"compatible": False, "reason": reason}
+                print(f"{sys_name:>10s} x {env_name:<18s}: skipped ({reason})")
+                continue
+            _, system = make_pair(
+                sys_name, env_name, **overrides.get(sys_name, {})
+            )
+            cell = evaluate_on_env(
+                system, seeds, num_episodes, num_envs, train_iterations
+            )
+            per_env[env_name] = cell
+            agg = cell["aggregates"]
+            lo, hi = agg["iqm_ci95"]
+            print(
+                f"{sys_name:>10s} x {env_name:<18s}: IQM={agg['iqm']:8.3f} "
+                f"[{lo:.3f}, {hi:.3f}]  mean={agg['mean']:8.3f}  "
+                f"{cell['steps_per_sec']:,.0f} steps/s  "
+                f"({time.perf_counter() - t0:.1f}s)"
+            )
 
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2)
@@ -120,22 +143,31 @@ def run_sweep(
 
 
 def to_markdown(results: Dict[str, object]) -> str:
-    """Render the sweep results as a per-scenario markdown table."""
+    """Render the sweep as a systems x envs support/score matrix."""
+    systems = list(results["systems"])
+    env_names = sorted(
+        {e for s in systems for e in results["systems"][s]["envs"]}
+    )
     lines = [
-        f"# `{results['system']}` evaluation sweep",
+        "# Evaluation sweep — systems x environments",
         "",
         f"{len(results['seeds'])} seeds x {results['num_episodes']} episodes "
-        f"per env, {results['train_iterations']} training iterations.",
+        f"per cell, {results['train_iterations']} training iterations. "
+        "Cells show IQM of team return [95% CI]; `--` marks incompatible "
+        "(system, env) pairs.",
         "",
-        "| env | IQM | 95% CI | mean | median | eval steps/s |",
-        "|---|---|---|---|---|---|",
+        "| system | " + " | ".join(env_names) + " |",
+        "|---|" + "---|" * len(env_names),
     ]
-    for name, cell in results["envs"].items():
-        agg = cell["aggregates"]
-        lo, hi = agg["iqm_ci95"]
-        lines.append(
-            f"| {name} | {agg['iqm']:.3f} | [{lo:.3f}, {hi:.3f}] | "
-            f"{agg['mean']:.3f} | {agg['median']:.3f} | "
-            f"{cell['steps_per_sec']:,.0f} |"
-        )
+    for sys_name in systems:
+        cells = []
+        for env_name in env_names:
+            cell = results["systems"][sys_name]["envs"].get(env_name)
+            if cell is None or not cell.get("compatible"):
+                cells.append("--")
+                continue
+            agg = cell["aggregates"]
+            lo, hi = agg["iqm_ci95"]
+            cells.append(f"{agg['iqm']:.2f} [{lo:.2f}, {hi:.2f}]")
+        lines.append(f"| {sys_name} | " + " | ".join(cells) + " |")
     return "\n".join(lines) + "\n"

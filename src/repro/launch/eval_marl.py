@@ -1,13 +1,18 @@
 """Scenario-sweep evaluation launcher — the measurement half of Block 2.
 
-Runs one registered system across every env in `repro.envs.REGISTRY` (or a
-single named env) with the fused greedy evaluator, and writes the
-``BENCH_eval.json`` artifact: per-env returns over seeds x episodes, robust
-aggregates (IQM + stratified-bootstrap 95% CI), and eval steps/sec.
+Runs any set of registered systems across any set of registered envs with
+the fused greedy evaluator, and writes the ``BENCH_eval.json`` artifact:
+every (system, env) cell of the support matrix, with per-cell returns over
+seeds x episodes, robust aggregates (IQM + stratified-bootstrap 95% CI)
+and eval steps/sec for runnable cells, and the spec-driven incompatibility
+reason for the rest.
 
-  PYTHONPATH=src python -m repro.launch.eval_marl --system vdn --env all
-  PYTHONPATH=src python -m repro.launch.eval_marl --system qmix \
-      --env smax_lite --train-iterations 2000 --seeds 0 1 2
+  # the full system x env compatibility matrix
+  PYTHONPATH=src python -m repro.launch.eval_marl
+
+  # a focused slice, with training before eval
+  PYTHONPATH=src python -m repro.launch.eval_marl --systems qmix ippo \
+      --envs smax_lite --train-iterations 2000 --seeds 0 1 2
 """
 from __future__ import annotations
 
@@ -15,15 +20,19 @@ import argparse
 
 from repro.envs import REGISTRY as ENVS
 from repro.eval.sweep import run_sweep
-from repro.launch.train_marl import SYSTEMS
+from repro.systems.registry import REGISTRY as SYSTEMS
 
 
 def main():
     p = argparse.ArgumentParser()
-    p.add_argument("--system", choices=sorted(SYSTEMS), default="vdn")
     p.add_argument(
-        "--env", choices=sorted(ENVS) + ["all"], default="all",
-        help="one registered env, or 'all' for the full registry sweep",
+        "--systems", nargs="+", choices=sorted(SYSTEMS) + ["all"],
+        default=["all"],
+        help="registered systems to sweep, or 'all' for the full registry",
+    )
+    p.add_argument(
+        "--envs", nargs="+", choices=sorted(ENVS) + ["all"], default=["all"],
+        help="registered envs to sweep, or 'all' for the full registry",
     )
     p.add_argument("--seeds", type=int, nargs="+", default=[0, 1, 2])
     p.add_argument("--eval-episodes", type=int, default=32)
@@ -36,11 +45,10 @@ def main():
     p.add_argument("--out", default="BENCH_eval.json")
     args = p.parse_args()
 
-    env_names = sorted(ENVS) if args.env == "all" else [args.env]
-    make_system = lambda env: SYSTEMS[args.system](env, None)
+    system_names = sorted(SYSTEMS) if "all" in args.systems else args.systems
+    env_names = sorted(ENVS) if "all" in args.envs else args.envs
     run_sweep(
-        args.system,
-        make_system,
+        system_names=system_names,
         env_names=env_names,
         seeds=args.seeds,
         num_episodes=args.eval_episodes,

@@ -2,14 +2,19 @@
 
 Where Acme-Mava built a Launchpad program graph
 (madqn.MADQN(...).build(); launchpad.launch(program, LOCAL_MULTI_PROCESSING)),
-here the *same system definition* is launched at three scales by picking a
-runner:
+here any system in ``repro.systems.REGISTRY`` is launched at three scales
+by picking a runner:
 
   --runner loop     the paper's Block-1 python environment loop (faithful)
   --runner anakin   fused jit: scan(steps) x vmap(num_envs)
   --runner sharded  shard_map over the mesh data axis (num_executors devices)
 
-  PYTHONPATH=src python -m repro.launch.train_marl --system vdn \
+Action-space compatibility is spec-driven: each registry entry declares
+discrete/continuous support and the env's spec is checked against it (a
+continuous-control system automatically builds the env in continuous mode
+when it has one).
+
+  PYTHONPATH=src python -m repro.launch.train_marl --system ippo \
       --env smax_lite --runner anakin --iterations 5000 --num-envs 16
 """
 from __future__ import annotations
@@ -26,22 +31,8 @@ from repro.core.system import (
     train_distributed,
 )
 from repro.envs import REGISTRY as ENVS
-from repro.systems.madqn import make_madqn
-from repro.systems.maddpg import MaddpgConfig, make_mad4pg, make_maddpg
-from repro.systems.offpolicy import OffPolicyConfig
-from repro.systems.qmix import make_qmix
-from repro.systems.vdn import make_vdn
-
-SYSTEMS = {
-    "madqn": lambda env, axis: make_madqn(env, OffPolicyConfig(distributed_axis=axis)),
-    "madqn-fp": lambda env, axis: make_madqn(
-        env, OffPolicyConfig(distributed_axis=axis, fingerprint=True)
-    ),
-    "vdn": lambda env, axis: make_vdn(env, OffPolicyConfig(distributed_axis=axis)),
-    "qmix": lambda env, axis: make_qmix(env, OffPolicyConfig(distributed_axis=axis)),
-    "maddpg": lambda env, axis: make_maddpg(env, MaddpgConfig(distributed_axis=axis)),
-    "mad4pg": lambda env, axis: make_mad4pg(env, MaddpgConfig(distributed_axis=axis)),
-}
+from repro.systems.registry import REGISTRY as SYSTEMS
+from repro.systems.registry import make_pair
 
 
 def main():
@@ -52,7 +43,11 @@ def main():
     p.add_argument("--iterations", type=int, default=2000)
     p.add_argument("--num-envs", type=int, default=16)
     p.add_argument("--num-executors", type=int, default=2, help="devices (sharded)")
-    p.add_argument("--continuous", action="store_true", help="continuous actions (spread)")
+    p.add_argument(
+        "--continuous", action="store_true",
+        help="force the env's continuous-action mode (spec-checked; "
+        "continuous systems enable it automatically)",
+    )
     p.add_argument("--seed", type=int, default=0)
     p.add_argument(
         "--eval-every", type=int, default=0,
@@ -63,12 +58,11 @@ def main():
     p.add_argument("--eval-episodes", type=int, default=32)
     args = p.parse_args()
 
-    env_kwargs = {}
-    if args.env == "spread" and (args.continuous or "ddpg" in args.system or "d4pg" in args.system):
-        env_kwargs["continuous"] = True
-    env = ENVS[args.env](**env_kwargs)
+    env_kwargs = {"continuous": True} if args.continuous else None
     axis = "data" if args.runner == "sharded" else None
-    system = SYSTEMS[args.system](env, axis)
+    env, system = make_pair(
+        args.system, args.env, distributed_axis=axis, env_kwargs=env_kwargs
+    )
     key = jax.random.key(args.seed)
 
     t0 = time.time()

@@ -4,7 +4,14 @@ from repro.systems.qmix import make_qmix
 from repro.systems.ippo import make_ippo
 from repro.systems.mappo import make_mappo
 from repro.systems.maddpg import make_maddpg, make_mad4pg
-from repro.systems.dial import make_dial, train_dial
+from repro.systems.dial import make_dial
+from repro.systems.registry import (
+    REGISTRY,
+    SystemEntry,
+    compatibility,
+    make_pair,
+    make_system,
+)
 
 __all__ = [
     "make_madqn",
@@ -15,5 +22,9 @@ __all__ = [
     "make_maddpg",
     "make_mad4pg",
     "make_dial",
-    "train_dial",
+    "REGISTRY",
+    "SystemEntry",
+    "compatibility",
+    "make_pair",
+    "make_system",
 ]

@@ -1,28 +1,43 @@
 """DIAL — Differentiable Inter-Agent Learning (Foerster et al. 2016).
 
 Recurrent Q-agents with a learned 1-bit channel on the switch riddle (the
-paper's Fig. 4 top experiment). Centralised training: the channel is the
-continuous DRU (sigmoid + noise), so TD gradients flow *between agents*
-through the message; decentralised execution thresholds the message to a
-hard bit.
+paper's Fig. 4 top experiment), expressed as a `repro.core.system.System`
+so it runs through the same three runners and fused evaluator as every
+other system. Centralised training: the channel is the continuous DRU
+(sigmoid + noise), so TD gradients flow *between agents* through the
+message; decentralised execution thresholds the message to a hard bit
+(which is exactly what the generic greedy evaluator exercises via
+``training=False``).
 
-Training is episode-based BPTT: (1) roll out a batch of episodes eps-greedily
-with the current params (no gradients); (2) re-run the recurrent nets over
-the stored episodes differentiably (same actions, messages recomputed with
-gradients) and minimise the TD error of the chosen-action Q's with targets
-from the target network.
+Training is trajectory-based BPTT over the rollout accumulator: the
+executor rolls eps-greedily (messages riding along in `Transition.extras`),
+and once a `rollout_len` trajectory is complete the trainer re-runs the
+recurrent nets over it differentiably (same actions; DIAL recomputes the
+messages with gradients, RIAL teacher-forces the stored hard bits) and
+minimises the TD error of the chosen-action Q's against target-network
+targets. Recurrent state is reset wherever a stored row starts a new
+episode (`Transition.step_type == FIRST`); trajectories that begin
+mid-episode use the standard R2D2 zero start-state approximation.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Sequence
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro import optim
+from repro.core.buffer import (
+    rollout_add,
+    rollout_init,
+    rollout_ready,
+    rollout_reset,
+    rollout_take,
+)
 from repro.core.modules.communication import BroadcastedCommunication, dru
-from repro.core.types import TrainState
+from repro.core.system import System
+from repro.core.types import TrainState, Transition
 from repro.envs.api import StepType
 from repro.nn import GRUCell, MLP
 
@@ -34,7 +49,6 @@ class DialConfig:
     noise_std: float = 0.5
     learning_rate: float = 5e-4
     gamma: float = 1.0
-    batch_episodes: int = 32
     eps_start: float = 1.0
     eps_end: float = 0.05
     eps_decay_updates: int = 300
@@ -46,6 +60,9 @@ class DialConfig:
     #         trained by Q-learning (no cross-agent gradients) — the RIAL
     #         baseline from Foerster et al. 2016
     protocol: str = "dial"
+    # BPTT window; None -> the env's horizon (one episode per env per update)
+    rollout_len: Optional[int] = None
+    distributed_axis: Optional[str] = None  # pmean grads over this mesh axis
 
 
 class DialNets(NamedTuple):
@@ -55,7 +72,7 @@ class DialNets(NamedTuple):
     msg_head: MLP
 
 
-def make_dial(env, cfg: DialConfig = DialConfig()):
+def make_dial(env, cfg: DialConfig = DialConfig()) -> System:
     spec = env.spec()
     ids = list(spec.agent_ids)
     n = len(ids)
@@ -63,6 +80,7 @@ def make_dial(env, cfg: DialConfig = DialConfig()):
     num_actions = spec.actions[ids[0]].num_values
     comm = BroadcastedCommunication(cfg.channel_size, cfg.noise_std, shared=True)
     in_dim = obs_dim + (comm.incoming_size(n) if cfg.use_comm else 0)
+    rollout_len = cfg.rollout_len or int(env.horizon)
 
     rial = cfg.protocol == "rial"
     msg_out = 2 * cfg.channel_size if rial else cfg.channel_size
@@ -76,7 +94,6 @@ def make_dial(env, cfg: DialConfig = DialConfig()):
         optim.clip_by_global_norm(cfg.max_grad_norm),
         optim.adamw(cfg.learning_rate),
     )
-    horizon = env.horizon
 
     def init_train(key):
         k1, k2, k3, k4 = jax.random.split(key, 4)
@@ -106,151 +123,145 @@ def make_dial(env, cfg: DialConfig = DialConfig()):
         frac = jnp.clip(steps / cfg.eps_decay_updates, 0.0, 1.0)
         return cfg.eps_start + frac * (cfg.eps_end - cfg.eps_start)
 
-    def rollout(params, steps, key, batch: int, training: bool):
-        """Roll a batch of episodes. Returns stacked episode data."""
-        k_env, k_run = jax.random.split(key)
-        env_state, ts = jax.vmap(env.reset)(jax.random.split(k_env, batch))
-        carry0 = initial_carry((batch,))
+    def _no_msg(obs_a):
+        return jnp.zeros(obs_a.shape[:-1] + (0,))
 
-        def step(c, t):
-            env_state, ts, carry, key, alive = c
-            key, k_eps, k_dru, k_act = jax.random.split(key, 4)
-            incoming = comm.route(carry["msg"]) if cfg.use_comm else None
-            actions, new_h, out_msgs, qs = {}, {}, {}, {}
-            eps = eps_at(steps) if training else 0.0
-            msg_bits = {}
-            for i, a in enumerate(ids):
-                msg_in = incoming[a] if cfg.use_comm else jnp.zeros((batch, 0))
-                q, m, h = agent_step(params, ts.observation[a], msg_in, carry["h"][a])
-                greedy = jnp.argmax(q, axis=-1)
-                ka = jax.random.fold_in(k_act, i)
-                rand = jax.random.randint(ka, greedy.shape, 0, num_actions)
-                explore = jax.random.uniform(ka, greedy.shape) < eps
-                actions[a] = jnp.where(explore, rand, greedy).astype(jnp.int32)
-                if rial:
-                    # RIAL: the message bit is an eps-greedy action from the
-                    # message Q-head (hard bit in training and execution)
-                    qm = m.reshape(batch, cfg.channel_size, 2)
-                    bit_greedy = jnp.argmax(qm, axis=-1)
-                    km = jax.random.fold_in(k_dru, i)
-                    bit_rand = jax.random.randint(km, bit_greedy.shape, 0, 2)
-                    bit_explore = jax.random.uniform(km, bit_greedy.shape) < eps
-                    bit = jnp.where(bit_explore, bit_rand, bit_greedy).astype(
-                        jnp.int32
-                    )
-                    msg_bits[a] = bit
-                    out_msgs[a] = bit.astype(jnp.float32)
-                else:
-                    # DIAL: DRU (continuous in training, hard bit execution)
-                    out_msgs[a] = dru(
-                        m, jax.random.fold_in(k_dru, i), cfg.noise_std, training
-                    )
-                new_h[a] = h
-                qs[a] = q
-            new_env_state, new_ts = jax.vmap(env.step)(env_state, actions)
-            # freeze finished episodes (no reset: fixed-horizon batch)
-            done_now = new_ts.step_type == StepType.LAST
+    # ------------------------------------------------------------ executor
 
-            def keep(new, old):
-                d = alive.reshape(alive.shape + (1,) * (new.ndim - 1))
-                return jnp.where(d, new, old)
+    def select_actions(train: TrainState, obs, state, carry, key, training=True):
+        del state  # decentralised execution
+        k_dru, k_act = jax.random.split(key)
+        incoming = comm.route(carry["msg"]) if cfg.use_comm else None
+        eps = eps_at(train.steps) if training else 0.0
+        actions, new_h, out_msgs, msg_bits = {}, {}, {}, {}
+        for i, a in enumerate(ids):
+            msg_in = incoming[a] if cfg.use_comm else _no_msg(obs[a])
+            q, m, h = agent_step(train.params, obs[a], msg_in, carry["h"][a])
+            greedy = jnp.argmax(q, axis=-1)
+            k_rand, k_explore = jax.random.split(jax.random.fold_in(k_act, i))
+            rand = jax.random.randint(k_rand, greedy.shape, 0, num_actions)
+            explore = jax.random.uniform(k_explore, greedy.shape) < eps
+            actions[a] = jnp.where(explore, rand, greedy).astype(jnp.int32)
+            if rial:
+                # RIAL: the message bit is an eps-greedy action from the
+                # message Q-head (hard bit in training and execution)
+                qm = m.reshape(m.shape[:-1] + (cfg.channel_size, 2))
+                bit_greedy = jnp.argmax(qm, axis=-1)
+                km_rand, km_explore = jax.random.split(
+                    jax.random.fold_in(k_dru, i)
+                )
+                bit_rand = jax.random.randint(km_rand, bit_greedy.shape, 0, 2)
+                bit_explore = jax.random.uniform(km_explore, bit_greedy.shape) < eps
+                bit = jnp.where(bit_explore, bit_rand, bit_greedy).astype(
+                    jnp.int32
+                )
+                msg_bits[a] = bit
+                out_msgs[a] = bit.astype(jnp.float32)
+            else:
+                # DIAL: DRU (continuous in training, hard bit execution)
+                out_msgs[a] = dru(
+                    m, jax.random.fold_in(k_dru, i), cfg.noise_std, training
+                )
+            new_h[a] = h
+        extras = {"msgs": out_msgs}
+        if rial:
+            extras["msg_bits"] = msg_bits
+        return actions, {"h": new_h, "msg": out_msgs}, extras
 
-            env_state2 = jax.tree_util.tree_map(keep, new_env_state, env_state)
-            ts2 = jax.tree_util.tree_map(keep, new_ts, ts)
-            reward = jnp.mean(jnp.stack(list(new_ts.reward.values())), axis=0)
-            data = dict(
-                obs=ts.observation,
-                actions=actions,
-                reward=reward * alive,
-                alive=alive,
-                discount=new_ts.discount,
-                msgs={a: out_msgs[a] for a in ids},
-                msg_bits=msg_bits if rial else {},
-            )
-            alive2 = alive & ~done_now
-            carry2 = {"h": new_h, "msg": out_msgs}
-            return (env_state2, ts2, carry2, key, alive2), data
+    # ------------------------------------------------------------- trainer
 
-        init = (env_state, ts, carry0, k_run, jnp.ones((batch,), bool))
-        (_, _, _, _, _), episode = jax.lax.scan(step, init, jnp.arange(horizon))
-        return episode  # leaves: (T, batch, ...)
-
-    def q_trajectory(params, episode, key, training: bool):
-        """Differentiable re-run over a stored episode.
+    def q_trajectory(params, traj: Transition, key, training: bool):
+        """Differentiable re-run over a stored (T, B) trajectory.
 
         DIAL: messages are recomputed with gradients (the channel is part of
         the computation graph). RIAL: stored hard bits are teacher-forced
         (no cross-agent gradients); returns message Q-values as well.
-        Returns (qs, msg_qs) — msg_qs is {} for DIAL.
+        Recurrent state is zeroed at rows whose step_type is FIRST, matching
+        the executor's auto-reset carry. Ends with one bootstrap step on the
+        final next-observation. Returns (qs, q_boot, msg_qs, msg_q_boot) —
+        the msg outputs are {} for DIAL.
         """
-        batch = episode["reward"].shape[1]
-        carry0 = initial_carry((batch,))
+        B = traj.discount.shape[1]
+        carry0 = initial_carry((B,))
 
-        def step(c, data_t):
-            carry, key = c
-            key, k_dru = jax.random.split(key)
+        def cell(carry, key, obs_t, msgs_t):
+            """One re-run step: per-agent Q/message/hidden from a row."""
+            k_dru = key
             incoming = comm.route(carry["msg"]) if cfg.use_comm else None
             qs, new_h, out_msgs, msg_qs = {}, {}, {}, {}
             for i, a in enumerate(ids):
-                msg_in = incoming[a] if cfg.use_comm else jnp.zeros((batch, 0))
-                q, m, h = agent_step(params, data_t["obs"][a], msg_in, carry["h"][a])
+                msg_in = incoming[a] if cfg.use_comm else _no_msg(obs_t[a])
+                q, m, h = agent_step(params, obs_t[a], msg_in, carry["h"][a])
                 qs[a] = q
                 new_h[a] = h
                 if rial:
-                    msg_qs[a] = m.reshape(batch, cfg.channel_size, 2)
-                    out_msgs[a] = data_t["msgs"][a]  # teacher-forced bits
+                    msg_qs[a] = m.reshape(m.shape[:-1] + (cfg.channel_size, 2))
+                    out_msgs[a] = msgs_t[a]  # teacher-forced bits
                 else:
                     out_msgs[a] = dru(
                         m, jax.random.fold_in(k_dru, i), cfg.noise_std, training
                     )
-            return ({"h": new_h, "msg": out_msgs}, key), (qs, msg_qs)
+            return {"h": new_h, "msg": out_msgs}, qs, msg_qs
 
-        (_, _), (qs, msg_qs) = jax.lax.scan(step, (carry0, key), episode)
-        return qs, msg_qs  # per-agent (T, batch, A) / (T, batch, C, 2)
+        def step(c, data_t):
+            carry, key = c
+            key, k_dru = jax.random.split(key)
+            # zero the recurrent state where this row starts a new episode
+            first = data_t.step_type == StepType.FIRST
+            mask = lambda z: jnp.where(
+                first.reshape(first.shape + (1,) * (z.ndim - 1)), 0.0, z
+            )
+            carry = jax.tree_util.tree_map(mask, carry)
+            carry, qs, msg_qs = cell(carry, k_dru, data_t.obs, data_t.extras["msgs"])
+            return (carry, key), (qs, msg_qs)
 
-    def loss_fn(params, target_params, episode, key, steps):
+        (carry, key), (qs, msg_qs) = jax.lax.scan(step, (carry0, key), traj)
+        # bootstrap step on the final next-obs (gated by discount in the loss)
+        last_obs = jax.tree_util.tree_map(lambda x: x[-1], traj.next_obs)
+        last_msgs = {a: traj.extras["msgs"][a][-1] for a in ids}
+        _, q_boot, msg_q_boot = cell(carry, key, last_obs, last_msgs)
+        return qs, q_boot, msg_qs, msg_q_boot
+
+    def loss_fn(params, target_params, traj: Transition, key):
         k1, k2 = jax.random.split(key)
-        qs, msg_qs = q_trajectory(params, episode, k1, training=True)
-        qs_t, msg_qs_t = q_trajectory(target_params, episode, k2, True)
-        qs_target = jax.tree_util.tree_map(jax.lax.stop_gradient, qs_t)
-        msg_qs_target = jax.tree_util.tree_map(jax.lax.stop_gradient, msg_qs_t)
+        qs, q_boot, msg_qs, msg_q_boot = q_trajectory(params, traj, k1, True)
+        qs_t, q_boot_t, msg_qs_t, msg_q_boot_t = jax.tree_util.tree_map(
+            jax.lax.stop_gradient, q_trajectory(target_params, traj, k2, True)
+        )
         total, count = 0.0, 0.0
-        r = episode["reward"]  # (T, B) shared
-        d = episode["discount"]
-        alive = episode["alive"].astype(jnp.float32)
+        d = traj.discount  # (T, B), 0 at terminal rows
         for a in ids:
             q = qs[a]  # (T, B, A)
-            qa = jnp.take_along_axis(q, episode["actions"][a][..., None], -1)[..., 0]
-            q_next_max = jnp.max(qs_target[a][1:], axis=-1)  # (T-1, B)
-            target = r[:-1] + cfg.gamma * d[:-1] * q_next_max
-            target = jnp.concatenate([target, r[-1][None]], axis=0)
-            td = (qa - jax.lax.stop_gradient(target)) * alive
+            qa = jnp.take_along_axis(q, traj.actions[a][..., None], -1)[..., 0]
+            q_next = jnp.concatenate([qs_t[a][1:], q_boot_t[a][None]], axis=0)
+            target = traj.rewards[a] + cfg.gamma * d * jnp.max(q_next, axis=-1)
+            td = qa - jax.lax.stop_gradient(target)
             total = total + jnp.sum(jnp.square(td))
-            count = count + jnp.sum(alive)
+            count = count + td.size
             if rial:
                 # message-bit Q-learning (RIAL trains the channel by TD)
                 qm = msg_qs[a]  # (T, B, C, 2)
-                bits = episode["msg_bits"][a][..., None]  # (T, B, C, 1)
+                bits = traj.extras["msg_bits"][a][..., None]  # (T, B, C, 1)
                 qmb = jnp.take_along_axis(qm, bits, -1)[..., 0]  # (T, B, C)
-                qm_next = jnp.max(msg_qs_target[a][1:], axis=-1)  # (T-1, B, C)
-                tgt = r[:-1, :, None] + cfg.gamma * d[:-1, :, None] * qm_next
-                tgt = jnp.concatenate(
-                    [tgt, jnp.broadcast_to(r[-1][None, :, None], tgt[:1].shape)],
-                    axis=0,
+                qm_next = jnp.concatenate(
+                    [msg_qs_t[a][1:], msg_q_boot_t[a][None]], axis=0
                 )
-                td_m = (qmb - jax.lax.stop_gradient(tgt)) * alive[..., None]
+                tgt = (
+                    traj.rewards[a][..., None]
+                    + cfg.gamma * d[..., None] * jnp.max(qm_next, axis=-1)
+                )
+                td_m = qmb - jax.lax.stop_gradient(tgt)
                 total = total + jnp.sum(jnp.square(td_m))
-                count = count + jnp.sum(alive) * cfg.channel_size
-        return total / jnp.maximum(count, 1.0)
+                count = count + td_m.size
+        return total / count
 
-    def update(train: TrainState, key):
-        k_roll, k_loss = jax.random.split(key)
-        episode = rollout(
-            train.params, train.steps, k_roll, cfg.batch_episodes, training=True
-        )
+    def update(train: TrainState, buffer, key):
+        traj = rollout_take(buffer)
         loss, grads = jax.value_and_grad(loss_fn)(
-            train.params, train.target_params, episode, k_loss, train.steps
+            train.params, train.target_params, traj, key
         )
+        if cfg.distributed_axis:
+            grads = jax.lax.pmean(grads, cfg.distributed_axis)
         updates, opt_state = opt.update(grads, train.opt_state, train.params)
         params = optim.apply_updates(train.params, updates)
         steps = train.steps + 1
@@ -259,40 +270,46 @@ def make_dial(env, cfg: DialConfig = DialConfig()):
             train.target_params,
             params,
         )
-        mean_ret = jnp.sum(episode["reward"]) / cfg.batch_episodes
         return (
             TrainState(params, target_params, opt_state, steps),
-            {"loss": loss, "return": mean_ret},
+            rollout_reset(buffer),
+            {"loss": loss, "eps": eps_at(steps)},
         )
 
-    def evaluate(train: TrainState, key, batch: int = 128):
-        episode = rollout(train.params, train.steps, key, batch, training=False)
-        return jnp.sum(episode["reward"]) / batch
+    # ------------------------------------------------------------- dataset
 
-    return dict(
+    def example_transition():
+        obs = {a: jnp.zeros(spec.observations[a].shape) for a in ids}
+        extras = {"msgs": {a: jnp.zeros((cfg.channel_size,)) for a in ids}}
+        if rial:
+            extras["msg_bits"] = {
+                a: jnp.zeros((cfg.channel_size,), jnp.int32) for a in ids
+            }
+        return Transition(
+            obs=obs,
+            actions={a: jnp.zeros((), jnp.int32) for a in ids},
+            rewards={a: jnp.zeros(()) for a in ids},
+            discount=jnp.zeros(()),
+            next_obs=obs,
+            state=jnp.zeros(spec.state.shape),
+            next_state=jnp.zeros(spec.state.shape),
+            extras=extras,
+            step_type=jnp.zeros((), jnp.int32),
+        )
+
+    def init_buffer(num_envs: int):
+        return rollout_init(example_transition(), rollout_len, num_envs)
+
+    name = cfg.protocol if cfg.use_comm else "rec-madqn"
+    return System(
+        env=env,
+        spec=spec,
         init_train=init_train,
         update=update,
-        evaluate=evaluate,
-        rollout=rollout,
-        name=(cfg.protocol if cfg.use_comm else "rec-madqn"),
+        select_actions=select_actions,
+        initial_carry=initial_carry,
+        init_buffer=init_buffer,
+        observe=rollout_add,
+        can_sample=lambda buf: rollout_ready(buf, rollout_len),
+        name=name,
     )
-
-
-def train_dial(env, cfg: DialConfig, key, num_updates: int):
-    """Jit-fused DIAL training. Returns (train_state, metrics over updates)."""
-    system = make_dial(env, cfg)
-    key, k_init = jax.random.split(key)
-    train = system["init_train"](k_init)
-
-    @jax.jit
-    def run(train, key):
-        def body(carry, _):
-            train, key = carry
-            key, k = jax.random.split(key)
-            train, metrics = system["update"](train, k)
-            return (train, key), metrics
-
-        return jax.lax.scan(body, (train, key), None, length=num_updates)
-
-    (train, _), metrics = run(train, key)
-    return train, metrics, system

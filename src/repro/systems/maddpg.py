@@ -106,7 +106,8 @@ def make_maddpg(env, cfg: MaddpgConfig = MaddpgConfig(), architecture=None) -> S
             return jnp.sum(probs * atoms, axis=-1), out
         return out[..., 0], out
 
-    def select_actions(train, obs, carry, key, training=True):
+    def select_actions(train, obs, state, carry, key, training=True):
+        del state  # decentralised execution
         actions = {}
         for i, a in enumerate(ids):
             mu = policy(train.params, a, obs[a])
@@ -117,7 +118,7 @@ def make_maddpg(env, cfg: MaddpgConfig = MaddpgConfig(), architecture=None) -> S
                 )
                 mu = jnp.clip(mu + noise, -1.0, 1.0)
             actions[a] = mu
-        return actions, carry
+        return actions, carry, {}
 
     def initial_carry(batch_shape):
         del batch_shape
@@ -210,6 +211,7 @@ def make_maddpg(env, cfg: MaddpgConfig = MaddpgConfig(), architecture=None) -> S
                 params, target_params, {"actor": a_opt, "critic": c_opt},
                 train.steps + 1,
             ),
+            buffer,
             {"critic_loss": closs, "actor_loss": aloss},
         )
 
@@ -224,7 +226,12 @@ def make_maddpg(env, cfg: MaddpgConfig = MaddpgConfig(), architecture=None) -> S
             state=jnp.zeros(spec.state.shape),
             next_state=jnp.zeros(spec.state.shape),
             extras={},
+            step_type=jnp.zeros((), jnp.int32),
         )
+
+    def init_buffer(num_envs: int):
+        del num_envs  # replay rows are flattened across envs
+        return buffer_init(example_transition(), cfg.buffer_capacity)
 
     return System(
         env=env,
@@ -233,11 +240,11 @@ def make_maddpg(env, cfg: MaddpgConfig = MaddpgConfig(), architecture=None) -> S
         update=update,
         select_actions=select_actions,
         initial_carry=initial_carry,
-        init_buffer=lambda: buffer_init(example_transition(), cfg.buffer_capacity),
+        init_buffer=init_buffer,
         observe=buffer_add,
-        sample=lambda buf, key: buffer_sample(buf, key, cfg.batch_size),
         can_sample=lambda buf: buffer_can_sample(buf, cfg.min_replay),
         name="mad4pg" if cfg.distributional else "maddpg",
+        action_space="continuous",
     )
 
 

@@ -100,18 +100,19 @@ def make_offpolicy_system(env, cfg: OffPolicyConfig, mixer=None, name="madqn") -
             return obs
         return fp.augment(obs, eps_at(train.steps), train.steps)
 
-    def select_actions(train: TrainState, obs, carry, key, training=True):
+    def select_actions(train: TrainState, obs, state, carry, key, training=True):
+        del state  # decentralised execution
         obs = _augment(obs, train)
         eps = eps_at(train.steps) if training else 0.0
         actions = {}
         for i, a in enumerate(ids):
-            k = jax.random.fold_in(key, i)
+            k_rand, k_explore = jax.random.split(jax.random.fold_in(key, i))
             q = q_values(train.params["q"], a, obs[a])
             greedy = jnp.argmax(q, axis=-1)
-            rand = jax.random.randint(k, greedy.shape, 0, num_actions[a])
-            explore = jax.random.uniform(k, greedy.shape) < eps
+            rand = jax.random.randint(k_rand, greedy.shape, 0, num_actions[a])
+            explore = jax.random.uniform(k_explore, greedy.shape) < eps
             actions[a] = jnp.where(explore, rand, greedy).astype(jnp.int32)
-        return actions, carry
+        return actions, carry, {}
 
     def initial_carry(batch_shape):
         del batch_shape
@@ -172,6 +173,7 @@ def make_offpolicy_system(env, cfg: OffPolicyConfig, mixer=None, name="madqn") -
         )
         return (
             TrainState(params, target_params, opt_state, steps),
+            buffer,
             {"loss": loss, "eps": eps_at(steps)},
         )
 
@@ -188,24 +190,22 @@ def make_offpolicy_system(env, cfg: OffPolicyConfig, mixer=None, name="madqn") -
             state=jnp.zeros(spec.state.shape),
             next_state=jnp.zeros(spec.state.shape),
             extras={},
+            step_type=jnp.zeros((), jnp.int32),
         )
 
-    def init_buffer():
+    def init_buffer(num_envs: int):
+        del num_envs  # replay rows are flattened across envs
         return buffer_init(example_transition(), cfg.buffer_capacity)
-
-    def update_wrapper(train, buffer, key):
-        return update(train, buffer, key)
 
     return System(
         env=env,
         spec=spec,
         init_train=init_train,
-        update=update_wrapper,
+        update=update,
         select_actions=select_actions,
         initial_carry=initial_carry,
         init_buffer=init_buffer,
         observe=buffer_add,
-        sample=lambda buf, key: buffer_sample(buf, key, cfg.batch_size),
         can_sample=lambda buf: buffer_can_sample(buf, cfg.min_replay),
         updates_per_step=cfg.updates_per_step,
         name=name,

@@ -1,23 +1,38 @@
 """On-policy PPO family: IPPO (decentralised critics) / MAPPO (centralised).
 
-The flagship systems of JAX-Mava. Fully-fused Anakin training: each update
-collects a `rollout_len` trajectory from `num_envs` vectorised environments
-inside the same jit as the PPO epochs (GAE, clipped objective, entropy
-bonus). MAPPO's critic conditions on the global environment state
+The flagship systems of JAX-Mava, expressed as `repro.core.system.System`
+instances so they run through the same three runners (python loop, Anakin,
+shard_map) and the fused evaluator as every other system. The dataset half
+is the rollout accumulator (`repro.core.buffer.RolloutState`): the executor
+streams transitions — with behaviour log-probs and values riding along in
+`Transition.extras` — into a time-major `rollout_len` buffer, and the
+`rollout_len`-gated `update` consumes the whole trajectory (per-agent GAE,
+PPO epochs with clipped objective + entropy bonus) and resets it.
+
+MAPPO's critic conditions on the global environment state
 (CentralisedQValueCritic architecture); IPPO's on each agent's observation.
+Advantages are computed from *per-agent* rewards, so general-sum scenarios
+(e.g. batched matrix games with distinct payoffs) are handled correctly.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import NamedTuple, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro import optim
-from repro.core.types import TrainState
-from repro.envs.api import EnvSpec, StepType
+from repro.core.buffer import (
+    rollout_add,
+    rollout_init,
+    rollout_ready,
+    rollout_reset,
+    rollout_take,
+)
+from repro.core.system import System
+from repro.core.types import TrainState, Transition
+from repro.envs.api import EnvSpec
 from repro.nn import MLP
 
 
@@ -36,18 +51,6 @@ class PPOConfig:
     rollout_len: int = 128
     shared_weights: bool = True
     distributed_axis: str | None = None
-
-
-class PPOBatch(NamedTuple):
-    obs: dict
-    state: jnp.ndarray
-    actions: dict
-    logp: dict
-    value: dict
-    reward: jnp.ndarray      # shared scalar (mean over agents)
-    discount: jnp.ndarray
-    advantage: dict
-    returns: dict
 
 
 def make_ppo_networks(env, cfg: PPOConfig, centralised: bool):
@@ -89,216 +92,202 @@ def make_ppo_networks(env, cfg: PPOConfig, centralised: bool):
     return ids, num_actions, init, logits, value
 
 
-@dataclasses.dataclass(frozen=True)
-class PPOSystem:
-    env: object
-    spec: EnvSpec
-    cfg: PPOConfig
-    centralised: bool
-    name: str
+def make_ppo_system(env, cfg: PPOConfig, centralised: bool, name: str) -> System:
+    spec: EnvSpec = env.spec()
+    ids, num_actions, init_params, logits_fn, value_fn = make_ppo_networks(
+        env, cfg, centralised
+    )
+    opt = optim.chain(
+        optim.clip_by_global_norm(cfg.max_grad_norm),
+        optim.adamw(cfg.learning_rate),
+    )
 
-    def build(self):
-        env, cfg = self.env, self.cfg
-        ids, num_actions, init_params, logits_fn, value_fn = make_ppo_networks(
-            env, cfg, self.centralised
+    def critic_obs(obs, state, agent):
+        return state if centralised else obs[agent]
+
+    def init_train(key):
+        params = init_params(key)
+        return TrainState(params, params, opt.init(params), jnp.zeros((), jnp.int32))
+
+    # ------------------------------------------------------------ executor
+
+    def select_actions(train: TrainState, obs, state, carry, key, training=True):
+        params = train.params
+        if not training:
+            # greedy execution (fused evaluator): no log-probs/values needed
+            actions = {
+                a: jnp.argmax(logits_fn(params, a, obs[a]), axis=-1).astype(
+                    jnp.int32
+                )
+                for a in ids
+            }
+            return actions, carry, {}
+        actions, logps, values = {}, {}, {}
+        for i, a in enumerate(ids):
+            lg = logits_fn(params, a, obs[a])
+            act_ = jax.random.categorical(jax.random.fold_in(key, i), lg)
+            lp = jax.nn.log_softmax(lg)
+            logps[a] = jnp.take_along_axis(lp, act_[..., None], axis=-1)[..., 0]
+            actions[a] = act_.astype(jnp.int32)
+            values[a] = value_fn(params, a, critic_obs(obs, state, a))
+        return actions, carry, {"logp": logps, "value": values}
+
+    def initial_carry(batch_shape):
+        del batch_shape
+        return ()
+
+    # ------------------------------------------------------------- trainer
+
+    def gae(traj: Transition, last_values):
+        """Per-agent GAE over the time-major trajectory (T, B)."""
+        adv, ret = {}, {}
+        values = traj.extras["value"]
+        disc = traj.discount * cfg.gamma
+        for a in ids:
+            v = values[a]          # (T, B) behaviour values
+            r = traj.rewards[a]    # (T, B) this agent's reward
+
+            def back(carry, inp):
+                gae_t, v_next = carry
+                v_t, r_t, d_t = inp
+                delta = r_t + d_t * v_next - v_t
+                gae_t = delta + d_t * cfg.gae_lambda * gae_t
+                return (gae_t, v_t), gae_t
+
+            (_, _), advs = jax.lax.scan(
+                back,
+                (jnp.zeros_like(last_values[a]), last_values[a]),
+                (v, r, disc),
+                reverse=True,
+            )
+            adv[a] = advs
+            ret[a] = advs + v
+        return adv, ret
+
+    def loss_fn(params, minibatch):
+        total = 0.0
+        metrics = {}
+        for a in ids:
+            lg = logits_fn(params, a, minibatch["obs"][a])
+            lp_all = jax.nn.log_softmax(lg)
+            lp = jnp.take_along_axis(
+                lp_all, minibatch["actions"][a][..., None], axis=-1
+            )[..., 0]
+            ratio = jnp.exp(lp - minibatch["logp"][a])
+            adv = minibatch["advantage"][a]
+            adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+            pg = -jnp.minimum(
+                ratio * adv,
+                jnp.clip(ratio, 1 - cfg.clip_eps, 1 + cfg.clip_eps) * adv,
+            )
+            v = value_fn(
+                params, a, critic_obs(minibatch["obs"], minibatch["state"], a)
+            )
+            v_loss = jnp.square(v - minibatch["returns"][a])
+            ent = -jnp.sum(jnp.exp(lp_all) * lp_all, axis=-1)
+            total = total + jnp.mean(
+                pg + cfg.value_coef * v_loss - cfg.entropy_coef * ent
+            )
+        metrics["loss"] = total
+        return total, metrics
+
+    def update(train: TrainState, buffer, key):
+        traj: Transition = rollout_take(buffer)  # leaves (T, B, ...)
+        # Bootstrap from the final next-observation. Params are unchanged
+        # since the rollout began (on-policy: no update fired mid-rollout),
+        # so these are behaviour values, exactly as if recorded at act time.
+        last_obs = jax.tree_util.tree_map(lambda x: x[-1], traj.next_obs)
+        last_state = traj.next_state[-1]
+        last_values = {
+            a: value_fn(train.params, a, critic_obs(last_obs, last_state, a))
+            for a in ids
+        }
+        adv, ret = gae(traj, last_values)
+        T, B = traj.discount.shape
+        data = dict(
+            obs=traj.obs,
+            state=traj.state,
+            actions=traj.actions,
+            logp=traj.extras["logp"],
+            advantage=adv,
+            returns=ret,
         )
-        opt = optim.chain(
-            optim.clip_by_global_norm(cfg.max_grad_norm),
-            optim.adamw(cfg.learning_rate),
-        )
-        centralised = self.centralised
-
-        def critic_obs(obs, state, agent):
-            return state if centralised else obs[agent]
-
-        def init_train(key):
-            params = init_params(key)
-            return TrainState(params, params, opt.init(params), jnp.zeros((), jnp.int32))
-
-        def act(params, obs, state, key):
-            actions, logps, values = {}, {}, {}
-            for i, a in enumerate(ids):
-                lg = logits_fn(params, a, obs[a])
-                k = jax.random.fold_in(key, i)
-                act_ = jax.random.categorical(k, lg)
-                lp = jax.nn.log_softmax(lg)
-                logps[a] = jnp.take_along_axis(lp, act_[..., None], axis=-1)[..., 0]
-                actions[a] = act_.astype(jnp.int32)
-                values[a] = value_fn(params, a, critic_obs(obs, state, a))
-            return actions, logps, values
-
-        def rollout(params, env_state, ts, key):
-            """Collect cfg.rollout_len steps from vmapped envs."""
-
-            def step(carry, _):
-                env_state, ts, key = carry
-                key, k_act, k_reset = jax.random.split(key, 3)
-                obs = ts.observation
-                gs = jax.vmap(env.global_state)(env_state)
-                actions, logps, values = act(params, obs, gs, k_act)
-                new_env_state, new_ts = jax.vmap(env.step)(env_state, actions)
-                reward = jnp.mean(jnp.stack(list(new_ts.reward.values())), axis=0)
-                done = new_ts.step_type == StepType.LAST
-                n = done.shape[0]
-                r_state, r_ts = jax.vmap(env.reset)(jax.random.split(k_reset, n))
-
-                def sel(new, old):
-                    d = done.reshape(done.shape + (1,) * (new.ndim - 1))
-                    return jnp.where(d, new, old)
-
-                env_state2 = jax.tree_util.tree_map(sel, r_state, new_env_state)
-                ts2 = jax.tree_util.tree_map(sel, r_ts, new_ts)
-                data = dict(
-                    obs=obs,
-                    state=gs,
-                    actions=actions,
-                    logp=logps,
-                    value=values,
-                    reward=reward,
-                    discount=new_ts.discount,
-                )
-                return (env_state2, ts2, key), data
-
-            (env_state, ts, key), traj = jax.lax.scan(
-                step, (env_state, ts, key), None, length=cfg.rollout_len
-            )
-            return env_state, ts, traj
-
-        def gae(traj, last_values):
-            adv, ret = {}, {}
-            for a in ids:
-                v = traj["value"][a]  # (T, B)
-                r = traj["reward"]
-                disc = traj["discount"] * cfg.gamma
-
-                def back(carry, inp):
-                    gae_t, v_next = carry
-                    v_t, r_t, d_t = inp
-                    delta = r_t + d_t * v_next - v_t
-                    gae_t = delta + d_t * cfg.gae_lambda * gae_t
-                    return (gae_t, v_t), gae_t
-
-                (_, _), advs = jax.lax.scan(
-                    back,
-                    (jnp.zeros_like(last_values[a]), last_values[a]),
-                    (v, r, disc),
-                    reverse=True,
-                )
-                adv[a] = advs
-                ret[a] = advs + v
-            return adv, ret
-
-        def loss_fn(params, minibatch):
-            total = 0.0
-            metrics = {}
-            for a in ids:
-                lg = logits_fn(params, a, minibatch["obs"][a])
-                lp_all = jax.nn.log_softmax(lg)
-                lp = jnp.take_along_axis(
-                    lp_all, minibatch["actions"][a][..., None], axis=-1
-                )[..., 0]
-                ratio = jnp.exp(lp - minibatch["logp"][a])
-                adv = minibatch["advantage"][a]
-                adv = (adv - adv.mean()) / (adv.std() + 1e-8)
-                pg = -jnp.minimum(
-                    ratio * adv,
-                    jnp.clip(ratio, 1 - cfg.clip_eps, 1 + cfg.clip_eps) * adv,
-                )
-                v = value_fn(
-                    params, a, critic_obs(minibatch["obs"], minibatch["state"], a)
-                )
-                v_loss = jnp.square(v - minibatch["returns"][a])
-                ent = -jnp.sum(jnp.exp(lp_all) * lp_all, axis=-1)
-                total = total + jnp.mean(
-                    pg + cfg.value_coef * v_loss - cfg.entropy_coef * ent
-                )
-            metrics["loss"] = total
-            return total, metrics
-
-        def update(train: TrainState, traj, last_values, key):
-            adv, ret = gae(traj, last_values)
-            T = cfg.rollout_len
-            B = traj["reward"].shape[1]
-            data = dict(traj, advantage=adv, returns=ret)
-            flat = jax.tree_util.tree_map(
-                lambda x: x.reshape((T * B,) + x.shape[2:]), data
-            )
-
-            def epoch(carry, _):
-                params, opt_state, key = carry
-                key, kp = jax.random.split(key)
-                perm = jax.random.permutation(kp, T * B)
-                shuffled = jax.tree_util.tree_map(lambda x: x[perm], flat)
-                mb_size = (T * B) // cfg.num_minibatches
-                mbs = jax.tree_util.tree_map(
-                    lambda x: x[: mb_size * cfg.num_minibatches].reshape(
-                        (cfg.num_minibatches, mb_size) + x.shape[1:]
-                    ),
-                    shuffled,
-                )
-
-                def mb_step(carry, mb):
-                    params, opt_state = carry
-                    (loss, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-                        params, mb
-                    )
-                    if cfg.distributed_axis:
-                        grads = jax.lax.pmean(grads, cfg.distributed_axis)
-                    updates, opt_state = opt.update(grads, opt_state, params)
-                    params = optim.apply_updates(params, updates)
-                    return (params, opt_state), loss
-
-                (params, opt_state), losses = jax.lax.scan(
-                    mb_step, (params, opt_state), mbs
-                )
-                return (params, opt_state, key), jnp.mean(losses)
-
-            (params, opt_state, _), losses = jax.lax.scan(
-                epoch, (train.params, train.opt_state, key), None, length=cfg.epochs
-            )
-            return (
-                TrainState(params, params, opt_state, train.steps + 1),
-                {"loss": jnp.mean(losses)},
-            )
-
-        def train_fn(key, num_updates: int, num_envs: int):
-            k_init, k_env, k_run = jax.random.split(key, 3)
-            train = init_train(k_init)
-            env_state, ts = jax.vmap(env.reset)(jax.random.split(k_env, num_envs))
-
-            @jax.jit
-            def run(train, env_state, ts, key):
-                def one_update(carry, _):
-                    train, env_state, ts, key = carry
-                    key, k_roll, k_upd, k_last = jax.random.split(key, 4)
-                    env_state, ts, traj = rollout(train.params, env_state, ts, k_roll)
-                    gs = jax.vmap(env.global_state)(env_state)
-                    _, _, last_values = act(train.params, ts.observation, gs, k_last)
-                    train, metrics = update(train, traj, last_values, k_upd)
-                    metrics["reward"] = jnp.mean(traj["reward"])
-                    return (train, env_state, ts, key), metrics
-
-                return jax.lax.scan(
-                    one_update, (train, env_state, ts, key), None, length=num_updates
-                )
-
-            (train, *_), metrics = run(train, env_state, ts, k_run)
-            return train, metrics
-
-        return dict(
-            init_train=init_train,
-            act=act,
-            rollout=rollout,
-            update=update,
-            train=train_fn,
-            ids=ids,
-            name=self.name,
+        flat = jax.tree_util.tree_map(
+            lambda x: x.reshape((T * B,) + x.shape[2:]), data
         )
 
+        def epoch(carry, _):
+            params, opt_state, key = carry
+            key, kp = jax.random.split(key)
+            perm = jax.random.permutation(kp, T * B)
+            shuffled = jax.tree_util.tree_map(lambda x: x[perm], flat)
+            mb_size = (T * B) // cfg.num_minibatches
+            mbs = jax.tree_util.tree_map(
+                lambda x: x[: mb_size * cfg.num_minibatches].reshape(
+                    (cfg.num_minibatches, mb_size) + x.shape[1:]
+                ),
+                shuffled,
+            )
 
-def make_ippo(env, cfg: PPOConfig = PPOConfig()):
-    return PPOSystem(env, env.spec(), cfg, centralised=False, name="ippo").build()
+            def mb_step(carry, mb):
+                params, opt_state = carry
+                (loss, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb
+                )
+                if cfg.distributed_axis:
+                    grads = jax.lax.pmean(grads, cfg.distributed_axis)
+                updates, opt_state = opt.update(grads, opt_state, params)
+                params = optim.apply_updates(params, updates)
+                return (params, opt_state), loss
+
+            (params, opt_state), losses = jax.lax.scan(
+                mb_step, (params, opt_state), mbs
+            )
+            return (params, opt_state, key), jnp.mean(losses)
+
+        (params, opt_state, _), losses = jax.lax.scan(
+            epoch, (train.params, train.opt_state, key), None, length=cfg.epochs
+        )
+        new_train = TrainState(params, params, opt_state, train.steps + 1)
+        return new_train, rollout_reset(buffer), {"loss": jnp.mean(losses)}
+
+    # ------------------------------------------------------------- dataset
+
+    def example_transition():
+        obs = {a: jnp.zeros(spec.observations[a].shape) for a in ids}
+        scalars = {a: jnp.zeros(()) for a in ids}
+        return Transition(
+            obs=obs,
+            actions={a: jnp.zeros((), jnp.int32) for a in ids},
+            rewards=dict(scalars),
+            discount=jnp.zeros(()),
+            next_obs=obs,
+            state=jnp.zeros(spec.state.shape),
+            next_state=jnp.zeros(spec.state.shape),
+            extras={"logp": dict(scalars), "value": dict(scalars)},
+            step_type=jnp.zeros((), jnp.int32),
+        )
+
+    def init_buffer(num_envs: int):
+        return rollout_init(example_transition(), cfg.rollout_len, num_envs)
+
+    return System(
+        env=env,
+        spec=spec,
+        init_train=init_train,
+        update=update,
+        select_actions=select_actions,
+        initial_carry=initial_carry,
+        init_buffer=init_buffer,
+        observe=rollout_add,
+        can_sample=lambda buf: rollout_ready(buf, cfg.rollout_len),
+        name=name,
+    )
 
 
-def make_mappo(env, cfg: PPOConfig = PPOConfig()):
-    return PPOSystem(env, env.spec(), cfg, centralised=True, name="mappo").build()
+def make_ippo(env, cfg: PPOConfig = PPOConfig()) -> System:
+    return make_ppo_system(env, cfg, centralised=False, name="ippo")
+
+
+def make_mappo(env, cfg: PPOConfig = PPOConfig()) -> System:
+    return make_ppo_system(env, cfg, centralised=True, name="mappo")

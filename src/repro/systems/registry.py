@@ -1,0 +1,229 @@
+"""The system registry: every algorithm family behind one constructor.
+
+Mirrors ``repro.envs.REGISTRY``: a name -> `SystemEntry` table plus
+``make_system(name, env, *, distributed_axis=None, **overrides)`` so the
+launchers, the sweep and user code build any of the nine systems the same
+way. Each entry declares the action-space regime the algorithm supports
+(spec-driven compatibility checks replace string heuristics like
+``"ddpg" in name``) and whether it requires homogeneous agents (shared
+recurrent weights, as in DIAL).
+
+``compatibility(system_name, env_name)`` answers whether a (system, env)
+cell of the support matrix is runnable — and why not, when it isn't —
+which is exactly what the ``eval_marl`` sweep writes into
+``BENCH_eval.json``. ``make_pair`` builds the (env, system) pair, turning
+on an env's continuous mode automatically when a continuous-control system
+asks for it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+from typing import Any, Callable, Dict, Optional
+
+from repro.envs import REGISTRY as ENV_REGISTRY
+from repro.envs.api import DiscreteSpec, EnvSpec
+from repro.systems.dial import DialConfig, make_dial
+from repro.systems.maddpg import MaddpgConfig, make_mad4pg, make_maddpg
+from repro.systems.madqn import make_madqn
+from repro.systems.offpolicy import OffPolicyConfig
+from repro.systems.onpolicy import PPOConfig, make_ippo, make_mappo
+from repro.systems.qmix import make_qmix
+from repro.systems.vdn import make_vdn
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemEntry:
+    """Registry row: how to build a system + what it declares to support."""
+
+    factory: Callable[[Any, Any], Any]  # (env, cfg) -> System
+    config_cls: type
+    action_space: str = "discrete"      # "discrete" | "continuous"
+    homogeneous_only: bool = False      # shared-weight recurrent systems
+    description: str = ""
+
+
+def _with(factory, **patch):
+    return lambda env, cfg: factory(env, dataclasses.replace(cfg, **patch))
+
+
+REGISTRY: Dict[str, SystemEntry] = {
+    "madqn": SystemEntry(
+        make_madqn, OffPolicyConfig,
+        description="independent double-DQN learners",
+    ),
+    "madqn-fp": SystemEntry(
+        _with(make_madqn, fingerprint=True), OffPolicyConfig,
+        description="MADQN + policy-fingerprint replay stabilisation",
+    ),
+    "vdn": SystemEntry(
+        make_vdn, OffPolicyConfig,
+        description="value decomposition (additive mixing)",
+    ),
+    "qmix": SystemEntry(
+        make_qmix, OffPolicyConfig,
+        description="monotonic hypernetwork mixing",
+    ),
+    "maddpg": SystemEntry(
+        make_maddpg, MaddpgConfig, action_space="continuous",
+        description="centralised-critic DDPG (continuous control)",
+    ),
+    "mad4pg": SystemEntry(
+        make_mad4pg, MaddpgConfig, action_space="continuous",
+        description="MADDPG with a C51 distributional critic",
+    ),
+    "ippo": SystemEntry(
+        make_ippo, PPOConfig,
+        description="independent PPO (decentralised critics)",
+    ),
+    "mappo": SystemEntry(
+        make_mappo, PPOConfig,
+        description="PPO with centralised critics (CTDE)",
+    ),
+    "dial": SystemEntry(
+        make_dial, DialConfig, homogeneous_only=True,
+        description="differentiable inter-agent communication",
+    ),
+    "rial": SystemEntry(
+        _with(make_dial, protocol="rial"), DialConfig, homogeneous_only=True,
+        description="RIAL baseline (Q-learned discrete channel)",
+    ),
+}
+
+
+# ----------------------------------------------------- spec-driven checks
+
+
+def env_action_space(spec: EnvSpec) -> str:
+    """The env's action regime, read off its spec (not its name)."""
+    kinds = {
+        "discrete" if isinstance(s, DiscreteSpec) else "continuous"
+        for s in spec.actions.values()
+    }
+    return kinds.pop() if len(kinds) == 1 else "mixed"
+
+def env_is_homogeneous(spec: EnvSpec) -> bool:
+    """True when every agent shares one (obs shape, action spec) signature."""
+    sigs = {
+        (spec.observations[a].shape, repr(spec.actions[a]))
+        for a in spec.agent_ids
+    }
+    return len(sigs) == 1
+
+
+def _support_reason(
+    system_name: str,
+    action_space: str,
+    homogeneous_only: bool,
+    spec: EnvSpec,
+) -> Optional[str]:
+    env_kind = env_action_space(spec)
+    if env_kind != action_space:
+        return (
+            f"{system_name} supports {action_space} action spaces; "
+            f"env has {env_kind} actions"
+        )
+    if homogeneous_only and not env_is_homogeneous(spec):
+        return f"{system_name} requires homogeneous agents (shared weights)"
+    return None
+
+
+def check_support(system_name: str, spec: EnvSpec) -> Optional[str]:
+    """None when the system supports this env spec, else the reason not."""
+    entry = REGISTRY[system_name]
+    return _support_reason(
+        system_name, entry.action_space, entry.homogeneous_only, spec
+    )
+
+
+def _env_supports_continuous(env_name: str) -> bool:
+    params = inspect.signature(ENV_REGISTRY[env_name]).parameters
+    return "continuous" in params
+
+
+def _env_kwargs_for(system_name: str, env_name: str, env_kwargs=None) -> dict:
+    kwargs = dict(env_kwargs or {})
+    if kwargs.get("continuous") and not _env_supports_continuous(env_name):
+        raise ValueError(
+            f"env {env_name!r} has no continuous-action mode "
+            "(no `continuous` construction flag)"
+        )
+    entry = REGISTRY[system_name]
+    if (
+        entry.action_space == "continuous"
+        and "continuous" not in kwargs
+        and _env_supports_continuous(env_name)
+    ):
+        kwargs["continuous"] = True
+    return kwargs
+
+
+def compatibility(system_name: str, env_name: str, env_kwargs=None) -> Optional[str]:
+    """None when the (system, env) cell is runnable, else the reason not."""
+    if system_name not in REGISTRY:
+        raise KeyError(
+            f"unknown system {system_name!r}; registered: {sorted(REGISTRY)}"
+        )
+    if env_name not in ENV_REGISTRY:
+        raise KeyError(
+            f"unknown env {env_name!r}; registered: {sorted(ENV_REGISTRY)}"
+        )
+    try:
+        kwargs = _env_kwargs_for(system_name, env_name, env_kwargs)
+    except ValueError as e:
+        return str(e)
+    spec = ENV_REGISTRY[env_name](**kwargs).spec()
+    return check_support(system_name, spec)
+
+
+# ------------------------------------------------------------ constructors
+
+
+def make_system(name: str, env, *, distributed_axis: Optional[str] = None, **overrides):
+    """Build a registered system on ``env`` (the `repro.envs.make_env` twin).
+
+    ``overrides`` are fields of the entry's config dataclass (e.g.
+    ``make_system("ippo", env, rollout_len=64)``); ``distributed_axis``
+    wires gradient pmean for the sharded runner.
+    """
+    if name not in REGISTRY:
+        raise KeyError(f"unknown system {name!r}; registered: {sorted(REGISTRY)}")
+    entry = REGISTRY[name]
+    # pre-build: the factory itself would crash on a mismatched spec
+    reason = check_support(name, env.spec())
+    if reason is not None:
+        raise ValueError(f"incompatible system/env: {reason}")
+    if distributed_axis is not None:
+        overrides = dict(overrides, distributed_axis=distributed_axis)
+    cfg = entry.config_cls(**overrides)
+    system = entry.factory(env, cfg)
+    # post-build: the System's own declaration must agree with its entry
+    # (System.action_space is the run-time truth; the entry mirrors it so
+    # `compatibility` can answer without building)
+    reason = _support_reason(
+        name, system.action_space, entry.homogeneous_only, system.spec
+    )
+    if reason is not None:
+        raise ValueError(f"incompatible system/env: {reason}")
+    return system
+
+
+def make_pair(
+    system_name: str,
+    env_name: str,
+    *,
+    distributed_axis: Optional[str] = None,
+    env_kwargs: Optional[dict] = None,
+    **overrides,
+):
+    """Build (env, system) by name, auto-selecting the env's action mode.
+
+    A continuous-control system turns on the env's ``continuous=True``
+    construction flag when the env supports one (spec-checked afterwards).
+    """
+    kwargs = _env_kwargs_for(system_name, env_name, env_kwargs)
+    env = ENV_REGISTRY[env_name](**kwargs)
+    system = make_system(
+        system_name, env, distributed_axis=distributed_axis, **overrides
+    )
+    return env, system

@@ -79,32 +79,31 @@ def test_networked_critic_masks_non_neighbours(i):
     assert np.abs(np.asarray(out1)).sum() > np.abs(np.asarray(out0)).sum()
 
 
-def test_dial_learns_on_switch_game_smoke():
-    """Short DIAL run: loss finite, return improves direction-ally."""
+def _dial_per_update_rewards(protocol: str, num_updates: int):
+    """Train DIAL/RIAL via the unified Anakin runner; per-update rewards."""
+    from repro.core.system import train_anakin
     from repro.envs import SwitchGame
-    from repro.systems.dial import DialConfig, train_dial
+    from repro.systems.dial import DialConfig, make_dial
 
     env = SwitchGame(num_agents=3)
-    _, metrics, _ = train_dial(
-        env, DialConfig(batch_episodes=16), jax.random.key(0), num_updates=60
+    system = make_dial(env, DialConfig(protocol=protocol))
+    rollout_len = env.horizon  # DialConfig default: one episode per env
+    _, metrics = train_anakin(
+        system, jax.random.key(0), num_updates * rollout_len, num_envs=16
     )
-    r = np.asarray(metrics["return"])
+    r = np.asarray(metrics["reward"])
+    return r.reshape(num_updates, rollout_len).mean(axis=-1)
+
+
+def test_dial_learns_on_switch_game_smoke():
+    """Short DIAL run through the unified System runner: not diverging."""
+    r = _dial_per_update_rewards("dial", 60)
     assert np.isfinite(r).all()
     assert r[-15:].mean() > r[:15].mean() - 0.05  # not diverging
 
 
 def test_rial_protocol_learns():
     """RIAL (discrete Q-learned channel) must also improve on the riddle."""
-    from repro.envs import SwitchGame
-    from repro.systems.dial import DialConfig, train_dial
-
-    env = SwitchGame(num_agents=3)
-    _, metrics, _ = train_dial(
-        env,
-        DialConfig(protocol="rial", batch_episodes=16),
-        jax.random.key(0),
-        num_updates=120,
-    )
-    r = np.asarray(metrics["return"])
+    r = _dial_per_update_rewards("rial", 120)
     assert np.isfinite(r).all()
     assert r[-30:].mean() > r[:30].mean()

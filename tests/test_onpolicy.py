@@ -1,18 +1,56 @@
-"""IPPO/MAPPO behaviour tests."""
+"""IPPO/MAPPO behaviour tests (System-API ports of the flagship systems)."""
 import jax
 import numpy as np
 
+from repro.core.system import train_anakin
 from repro.envs import MatrixGame, SpeakerListener
 from repro.systems.onpolicy import PPOConfig, make_ippo, make_mappo
+
+# Learning-curve milestones recorded from the seed (pre-System) IPPO
+# implementation on matrix_game: PPOConfig(rollout_len=32, epochs=4,
+# num_minibatches=2, entropy_coef=0.02, learning_rate=1e-3), seed 0,
+# 150 updates x 16 envs -> per-update mean reward 2.281 (first 15) and
+# 4.994 (last 15); the policy converges to the climbing game's safe
+# equilibrium (payoff 5).
+SEED_IPPO_FIRST15 = 2.281
+SEED_IPPO_LAST15 = 4.994
+
+
+def _per_update_rewards(system, key, num_updates, rollout_len, num_envs):
+    """Train fused and fold per-iteration rewards into per-update means."""
+    _, metrics = train_anakin(
+        system, key, num_updates * rollout_len, num_envs=num_envs
+    )
+    r = np.asarray(metrics["reward"])
+    return r.reshape(num_updates, rollout_len).mean(axis=-1)
 
 
 def test_ippo_learns_matrix_game():
     env = MatrixGame(horizon=10)
     system = make_ippo(env, PPOConfig(rollout_len=32, epochs=4, num_minibatches=2,
                                       entropy_coef=0.02, learning_rate=1e-3))
-    train, metrics = system["train"](jax.random.key(0), num_updates=150, num_envs=16)
-    r = np.asarray(metrics["reward"])
+    r = _per_update_rewards(system, jax.random.key(0), 150, 32, 16)
     assert r[-15:].mean() > r[:15].mean() + 1.0, (r[:15].mean(), r[-15:].mean())
+
+
+def test_ippo_parity_with_seed_curve():
+    """The System-API port reproduces the seed implementation's curve.
+
+    Same hyperparameters, seed and env-step budget as the recorded seed
+    run: the port must hit the same milestones — clear early->late
+    improvement and convergence to the safe equilibrium (payoff ~5).
+    """
+    env = MatrixGame(horizon=10)
+    system = make_ippo(env, PPOConfig(rollout_len=32, epochs=4, num_minibatches=2,
+                                      entropy_coef=0.02, learning_rate=1e-3))
+    r = _per_update_rewards(system, jax.random.key(0), 150, 32, 16)
+    late = r[-15:].mean()
+    improvement = late - r[:15].mean()
+    seed_improvement = SEED_IPPO_LAST15 - SEED_IPPO_FIRST15
+    # converged within 10% of the seed's final level...
+    assert abs(late - SEED_IPPO_LAST15) < 0.1 * abs(SEED_IPPO_LAST15), late
+    # ...with at least half the seed's early->late improvement
+    assert improvement > 0.5 * seed_improvement, (improvement, seed_improvement)
 
 
 def test_mappo_improves_speaker_listener():
@@ -20,9 +58,66 @@ def test_mappo_improves_speaker_listener():
     system = make_mappo(
         env, PPOConfig(rollout_len=64, shared_weights=False, learning_rate=7e-4)
     )
-    train, metrics = system["train"](jax.random.key(0), num_updates=120, num_envs=16)
-    r = np.asarray(metrics["reward"])
+    r = _per_update_rewards(system, jax.random.key(0), 120, 64, 16)
     assert r[-12:].mean() > r[:12].mean(), (r[:12].mean(), r[-12:].mean())
+
+
+def test_ppo_per_agent_rewards_drive_gae():
+    """General-sum rewards must not be collapsed to their mean.
+
+    On a general-sum variant of the matrix game (agent_1's payoff is the
+    negation of agent_0's), a mean-collapsing implementation sees the same
+    (zero) reward stream for both variants below, so its updates would be
+    bitwise identical; the per-agent GAE fix must produce different ones.
+    (A plain nonzero-delta check would not do: AdamW weight decay moves
+    params even at zero gradient.)
+    """
+    from repro.core.types import Transition
+
+    env = MatrixGame(horizon=10)
+    cfg = PPOConfig(rollout_len=8, epochs=1, num_minibatches=1, entropy_coef=0.0)
+    system = make_ippo(env, cfg)
+    train = system.init_train(jax.random.key(0))
+
+    # hand-roll one rollout, storing antisymmetric per-agent rewards in one
+    # buffer and their (identically zero) mean in the other
+    buf_pa, buf_mean = system.init_buffer(4), system.init_buffer(4)
+    key = jax.random.key(1)
+    env_state, ts = jax.vmap(env.reset)(jax.random.split(key, 4))
+    for _ in range(cfg.rollout_len):
+        key, k_act = jax.random.split(key)
+        gs = jax.vmap(env.global_state)(env_state)
+        actions, _, extras = system.select_actions(
+            train, ts.observation, gs, (), k_act
+        )
+        env_state, new_ts = jax.vmap(env.step)(env_state, actions)
+        r0 = new_ts.reward["agent_0"]
+        per_agent = {"agent_0": r0, "agent_1": -r0}      # general-sum
+        collapsed = {a: (r0 - r0) / 2 for a in per_agent}  # their mean: 0
+
+        def tr(rewards):
+            return Transition(
+                obs=ts.observation, actions=actions, rewards=rewards,
+                discount=new_ts.discount, next_obs=new_ts.observation,
+                state=gs, next_state=jax.vmap(env.global_state)(env_state),
+                extras=extras, step_type=ts.step_type,
+            )
+
+        buf_pa = system.observe(buf_pa, tr(per_agent))
+        buf_mean = system.observe(buf_mean, tr(collapsed))
+        ts = new_ts
+    assert bool(system.can_sample(buf_pa))
+    train_pa, new_buf, _ = system.update(train, buf_pa, jax.random.key(2))
+    train_mean, _, _ = system.update(train, buf_mean, jax.random.key(2))
+    # the update consumed-and-reset the rollout...
+    assert int(new_buf.t) == 0
+    # ...and per-agent rewards produced a different update than their mean
+    pa = jax.tree_util.tree_leaves(train_pa.params["actor"])
+    mean = jax.tree_util.tree_leaves(train_mean.params["actor"])
+    assert any(
+        float(np.abs(np.asarray(p) - np.asarray(m)).max()) > 1e-6
+        for p, m in zip(pa, mean)
+    )
 
 
 def test_centralised_critic_sees_state():
@@ -31,8 +126,8 @@ def test_centralised_critic_sees_state():
     ippo = make_ippo(env, PPOConfig())
     mappo = make_mappo(env, PPOConfig())
     k = jax.random.key(0)
-    ti = ippo["init_train"](k)
-    tm = mappo["init_train"](k)
+    ti = ippo.init_train(k)
+    tm = mappo.init_train(k)
     spec = env.spec()
     # ippo critic first layer: obs dim; mappo: state dim
     wi = jax.tree_util.tree_leaves(ti.params["critic"])[1]
