@@ -15,11 +15,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core.system import (
-    init_system_state,
-    run_environment_loop,
-    train_anakin,
-)
+from repro.core.system import run_environment_loop, train_anakin
 from repro.envs import Spread
 from repro.eval import make_evaluator
 from repro.systems.madqn import make_madqn

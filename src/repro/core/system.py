@@ -29,6 +29,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.types import EvalMetrics, SystemState, TrainState, Transition
 from repro.envs.api import StepType
+from repro.envs.wrappers import AutoReset, EpisodeStats, replace_reset_keys
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +71,21 @@ class System:
     action_space: str = "discrete"
 
 
+def _training_env(env):
+    """The runner-side wrapper stack: episode stats over fused auto-reset.
+
+    The runners used to hand-roll reset/global-state plumbing (select-where
+    auto-resets, python-side return accumulators); it now composes from the
+    `repro.envs.wrappers` stack, shared by every env and runner.
+    """
+    return EpisodeStats(AutoReset(env))
+
+
+def _team_return(last_returns):
+    """Mean-over-agents of the per-agent completed-episode returns."""
+    return jnp.mean(jnp.stack(list(last_returns.values())), axis=0)
+
+
 # ------------------------------------------------------ faithful python loop
 
 
@@ -84,9 +100,10 @@ def run_environment_loop(
     """The paper's Block-1 executor-environment loop, one env, python-paced.
 
     Returns (train_state, buffer_state, EvalMetrics over the episodes) —
-    per-agent and team (mean-over-agents) undiscounted returns.
+    per-agent and team (mean-over-agents) undiscounted returns, accumulated
+    by the `EpisodeStats` wrapper rather than python-side bookkeeping.
     """
-    env = system.env
+    env = EpisodeStats(system.env)
     ids = list(system.spec.agent_ids)
     key, k_init = jax.random.split(key)
     if train_state is None:
@@ -108,8 +125,6 @@ def run_environment_loop(
         # make initial observation for each agent
         env_state, ts = reset(k_reset)
         carry = system.initial_carry(())
-        ep_return = {a: 0.0 for a in ids}
-        ep_length = 0
         while int(ts.step_type) != StepType.LAST:
             key, k_act, k_upd = jax.random.split(key, 3)
             obs = ts.observation
@@ -137,13 +152,10 @@ def run_environment_loop(
                         train_state, buffer_state, k_upd
                     )
             env_state, ts = new_env_state, new_ts
-            for a in ids:
-                ep_return[a] += float(new_ts.reward[a])
-            ep_length += 1
         for a in ids:
-            agent_returns[a].append(ep_return[a])
-        team_returns.append(sum(ep_return.values()) / len(ids))
-        lengths.append(ep_length)
+            agent_returns[a].append(float(env_state.last_returns[a]))
+        team_returns.append(float(_team_return(env_state.last_returns)))
+        lengths.append(int(env_state.last_length))
     metrics = EvalMetrics(
         episode_return=np.asarray(team_returns),
         agent_returns={a: np.asarray(agent_returns[a]) for a in ids},
@@ -155,19 +167,30 @@ def run_environment_loop(
 # ------------------------------------------------------------ Anakin runner
 
 
-def _one_iteration(system: System, carry, key):
-    """One vectorised step of every env + updates. carry = SystemState."""
+def _one_iteration(system: System, tenv, carry, key):
+    """One vectorised step of every env + updates. carry = SystemState.
+
+    ``tenv`` is the wrapper stack from `_training_env`: `AutoReset` fuses
+    episode boundaries into the step (a terminated env returns the FIRST
+    timestep of its next episode, carrying the terminal reward/discount)
+    and `EpisodeStats` accumulates completed-episode returns — so the
+    runner has no reset plumbing of its own.  Auto-reset randomness is
+    refreshed from the runner key every iteration, keeping training a
+    reproducible function of the runner key alone.
+    """
     st: SystemState = carry
     key, k_act, k_upd, k_reset = jax.random.split(key, 4)
     num_envs = jax.tree_util.tree_leaves(st.env_state)[0].shape[0]
-    env = system.env
+    env_state = replace_reset_keys(
+        st.env_state, jax.random.split(k_reset, num_envs)
+    )
 
     obs = st.timestep.observation
-    gs = jax.vmap(env.global_state)(st.env_state)
+    gs = jax.vmap(tenv.global_state)(env_state)
     actions, new_carry, extras = system.select_actions(
         st.train, obs, gs, st.carry, k_act, training=True
     )
-    new_env_state, new_ts = jax.vmap(env.step)(st.env_state, actions)
+    new_env_state, new_ts = jax.vmap(tenv.step)(env_state, actions)
     tr = Transition(
         obs=obs,
         actions=actions,
@@ -175,22 +198,20 @@ def _one_iteration(system: System, carry, key):
         discount=new_ts.discount,
         next_obs=new_ts.observation,
         state=gs,
-        next_state=jax.vmap(env.global_state)(new_env_state),
+        next_state=jax.vmap(tenv.global_state)(new_env_state),
         extras=extras,
         step_type=st.timestep.step_type,
     )
     buffer = system.observe(st.buffer, tr)
 
-    # auto-reset finished envs (carry resets too)
-    done = new_ts.step_type == StepType.LAST
-    reset_state, reset_ts = jax.vmap(env.reset)(jax.random.split(k_reset, num_envs))
+    # a FIRST out of step marks an auto-reset boundary: executor carries
+    # (recurrent cores, comm messages) restart with the new episode
+    done = new_ts.step_type == StepType.FIRST
 
     def sel(new, old):
         d = done.reshape(done.shape + (1,) * (new.ndim - 1))
         return jnp.where(d, new, old)
 
-    env_state = jax.tree_util.tree_map(sel, reset_state, new_env_state)
-    timestep = jax.tree_util.tree_map(sel, reset_ts, new_ts)
     fresh_carry = system.initial_carry((num_envs,))
     new_carry = jax.tree_util.tree_map(sel, fresh_carry, new_carry)
 
@@ -210,13 +231,25 @@ def _one_iteration(system: System, carry, key):
     )
 
     ep_reward = jnp.mean(jnp.stack(list(new_ts.reward.values())))
-    metrics = {"reward": ep_reward, "done_frac": jnp.mean(done.astype(jnp.float32))}
-    return SystemState(train, buffer, env_state, timestep, new_carry, key), metrics
+    done_f = done.astype(jnp.float32)
+    # mean return of the episodes that completed this iteration (0 if none)
+    ep_return = jnp.sum(
+        _team_return(new_env_state.last_returns) * done_f
+    ) / jnp.maximum(jnp.sum(done_f), 1.0)
+    metrics = {
+        "reward": ep_reward,
+        "done_frac": jnp.mean(done_f),
+        "episode_return": ep_return,
+    }
+    return SystemState(train, buffer, new_env_state, new_ts, new_carry, key), metrics
 
 
-def init_system_state(system: System, key, num_envs: int) -> SystemState:
+def init_system_state(
+    system: System, key, num_envs: int, train_env=None
+) -> SystemState:
+    tenv = train_env if train_env is not None else _training_env(system.env)
     k_train, k_env, k_sys = jax.random.split(key, 3)
-    env_state, ts = jax.vmap(system.env.reset)(jax.random.split(k_env, num_envs))
+    env_state, ts = jax.vmap(tenv.reset)(jax.random.split(k_env, num_envs))
     return SystemState(
         train=system.init_train(k_train),
         buffer=system.init_buffer(num_envs),
@@ -248,11 +281,12 @@ def train_anakin(
     reproducible by the standalone `repro.eval.evaluate` given the same
     train state and key.
     """
-    st = init_system_state(system, key, num_envs)
+    tenv = _training_env(system.env)
+    st = init_system_state(system, key, num_envs, train_env=tenv)
 
     def train_body(carry, _):
         st = carry
-        st, metrics = _one_iteration(system, st, st.key)
+        st, metrics = _one_iteration(system, tenv, st, st.key)
         return st, metrics
 
     if eval_every <= 0:
@@ -329,13 +363,15 @@ def train_distributed(
             system, eval_episodes, eval_num_envs or num_envs_per_device
         )
 
+    tenv = _training_env(system.env)
+
     def per_device(dev_keys):
         k = dev_keys[0]
-        st = init_system_state(system, k, num_envs_per_device)
+        st = init_system_state(system, k, num_envs_per_device, train_env=tenv)
 
         def body(carry, _):
             st = carry
-            st, metrics = _one_iteration(system, st, st.key)
+            st, metrics = _one_iteration(system, tenv, st, st.key)
             return st, metrics
 
         st, metrics = jax.lax.scan(body, st, None, length=num_iterations)

@@ -4,6 +4,30 @@ from repro.envs.switch_game import SwitchGame
 from repro.envs.spread import Spread
 from repro.envs.speaker_listener import SpeakerListener
 from repro.envs.smax_lite import SmaxLite
+from repro.envs.robot_warehouse import RobotWarehouse
+from repro.envs.lbf import LevelBasedForaging
+from repro.envs.wrappers import (
+    AgentIdObs,
+    AutoReset,
+    ConcatObsState,
+    EpisodeStats,
+    Wrapper,
+)
+
+
+def _gridworld(cls):
+    """Registry factory for the gridworld family: raw dynamics + the
+    standard observation stack (one-hot agent ids for shared-weight
+    policies, concat-of-observations global state for centralised
+    critics) built from wrappers instead of per-env code."""
+
+    def factory(**kwargs):
+        return ConcatObsState(AgentIdObs(cls(**kwargs)))
+
+    factory.__name__ = f"make_{cls.__name__}"
+    factory.__doc__ = f"Wrapped {cls.__name__} (AgentIdObs + ConcatObsState)."
+    return factory
+
 
 REGISTRY = {
     "matrix_game": MatrixGame,
@@ -11,6 +35,8 @@ REGISTRY = {
     "spread": Spread,
     "speaker_listener": SpeakerListener,
     "smax_lite": SmaxLite,
+    "robot_warehouse": _gridworld(RobotWarehouse),
+    "lbf": _gridworld(LevelBasedForaging),
 }
 
 
@@ -32,6 +58,13 @@ __all__ = [
     "Spread",
     "SpeakerListener",
     "SmaxLite",
+    "RobotWarehouse",
+    "LevelBasedForaging",
+    "Wrapper",
+    "AgentIdObs",
+    "AutoReset",
+    "ConcatObsState",
+    "EpisodeStats",
     "REGISTRY",
     "make_env",
 ]

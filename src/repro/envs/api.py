@@ -75,3 +75,36 @@ def agent_ids(n: int) -> Tuple[str, ...]:
 
 def shared_reward(ids, value) -> Dict[str, jnp.ndarray]:
     return {a: value for a in ids}
+
+
+# ------------------------------------------------------- TimeStep factories
+# The shared reset/step plumbing every env used to hand-roll: `reset`
+# returns ``restart(...)``, `step` returns ``transition(...)``, and the
+# step-type/discount bookkeeping lives in exactly one place.
+
+
+def restart(ids, observation) -> TimeStep:
+    """The FIRST TimeStep of an episode: zero rewards, discount one."""
+    return TimeStep(
+        step_type=jnp.asarray(StepType.FIRST, jnp.int32),
+        reward=shared_reward(ids, jnp.zeros(())),
+        discount=jnp.ones(()),
+        observation=observation,
+    )
+
+
+def transition(ids, reward, observation, done) -> TimeStep:
+    """A MID/LAST TimeStep from one env step.
+
+    ``reward`` is either a shared scalar (broadcast to every agent — the
+    cooperative convention) or a per-agent dict (general-sum / per-agent
+    reward regimes). ``done`` selects LAST + zero discount.
+    """
+    if not isinstance(reward, dict):
+        reward = shared_reward(ids, reward)
+    return TimeStep(
+        step_type=jnp.where(done, StepType.LAST, StepType.MID).astype(jnp.int32),
+        reward=reward,
+        discount=jnp.where(done, 0.0, 1.0),
+        observation=observation,
+    )

@@ -1,0 +1,55 @@
+"""Shared gridworld mechanics for the cooperative warehouse/foraging envs.
+
+Integer (row, col) grids with cardinal moves, one-pass collision
+resolution and distinct-cell spawning — all pure jnp so the envs built on
+them stay vmap-able and scannable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# action 0 = noop, 1..4 = up / down / left / right (row, col deltas)
+MOVES = jnp.array(
+    [[0, 0], [-1, 0], [1, 0], [0, -1], [0, 1]], jnp.int32
+)
+
+
+def apply_moves(pos, actions, grid_size: int):
+    """Proposed positions: actions 1..4 move one cell, anything else stays."""
+    is_move = (actions >= 1) & (actions <= 4)
+    idx = jnp.where(is_move, actions, 0)
+    return jnp.clip(pos + MOVES[idx], 0, grid_size - 1)
+
+
+def hits_cells(proposed, cells, mask):
+    """For each agent, whether its proposed cell is one of `cells[mask]`."""
+    hit = jnp.all(proposed[:, None] == cells[None, :], axis=-1) & mask[None, :]
+    return hit.any(-1)
+
+
+def resolve_collisions(pos, proposed, blocked=None):
+    """One-pass conservative collision resolution.
+
+    A move is cancelled when its target is (a) another agent's current
+    cell, (b) another agent's proposed cell, or (c) statically `blocked`.
+    Cancelling all contested moves in one pass keeps the no-two-agents-
+    per-cell invariant without iterating: surviving movers go to cells
+    that were empty and uncontested, cancelled agents keep their own
+    (distinct) cells.  (Conservative: an agent cannot enter a cell being
+    vacated this same step.)
+    """
+    n = pos.shape[0]
+    eye = jnp.eye(n, dtype=bool)
+    same_prop = jnp.all(proposed[:, None] == proposed[None, :], axis=-1) & ~eye
+    into_cur = jnp.all(proposed[:, None] == pos[None, :], axis=-1) & ~eye
+    conflict = same_prop.any(-1) | into_cur.any(-1)
+    if blocked is not None:
+        conflict = conflict | blocked
+    return jnp.where(conflict[:, None], pos, proposed)
+
+
+def sample_distinct_cells(key, grid_size: int, n: int):
+    """`n` distinct (row, col) cells via a permutation of the flat grid."""
+    flat = jax.random.permutation(key, grid_size * grid_size)[:n]
+    return jnp.stack([flat // grid_size, flat % grid_size], axis=-1).astype(jnp.int32)

@@ -1,0 +1,169 @@
+"""Level-Based Foraging (Albrecht & Ramamoorthy) in pure JAX.
+
+N leveled agents forage F leveled foods on a grid.  Agents adjacent to a
+food that choose ``load`` collect it iff the sum of their levels reaches
+the food's level — foods can be leveled above any single agent, forcing
+co-location and simultaneous loading (the coordination probe the LBF
+benchmarks are built around).
+
+Two reward regimes (the per-agent + team axes of the original suite):
+
+* ``shared_reward=False`` (default): each participating agent is paid its
+  level-proportional share of the food's level, normalised by the total
+  food level so a perfect episode sums to 1 across the team;
+* ``shared_reward=True``: every agent receives the team mean — the fully
+  cooperative regime the value-decomposition systems assume.
+
+Actions: 0 noop, 1..4 cardinal moves, 5 load.  Episodes end when every
+food is collected or at ``horizon``.  Global state and agent-id features
+come from the wrapper stack (`AgentIdObs` + `ConcatObsState`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.api import DiscreteSpec, ArraySpec, EnvSpec, agent_ids, restart, transition
+from repro.envs.grid import apply_moves, hits_cells, resolve_collisions, sample_distinct_cells
+
+
+class LbfState(NamedTuple):
+    t: jnp.ndarray            # () int32
+    pos: jnp.ndarray          # (N, 2) int32
+    levels: jnp.ndarray       # (N,) int32 agent levels (static per episode)
+    food_pos: jnp.ndarray     # (F, 2) int32
+    food_level: jnp.ndarray   # (F,) int32
+    food_active: jnp.ndarray  # (F,) bool
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelBasedForaging:
+    num_agents: int = 2
+    grid_size: int = 8
+    num_food: int = 3
+    max_level: int = 2
+    horizon: int = 32
+    shared_reward: bool = False
+
+    def __post_init__(self):
+        if self.num_agents + self.num_food > self.grid_size**2:
+            raise ValueError("grid too small for agents + food")
+
+    @property
+    def agent_ids(self):
+        return agent_ids(self.num_agents)
+
+    @property
+    def num_actions(self):
+        return 6  # noop + 4 moves + load
+
+    def obs_dim(self) -> int:
+        # own pos(2) + own level(1)
+        # + per food: rel(2) + level(1) + active(1)
+        # + per other agent: rel(2) + level(1)
+        return 3 + 4 * self.num_food + 3 * (self.num_agents - 1)
+
+    def spec(self) -> EnvSpec:
+        obs = ArraySpec((self.obs_dim(),))
+        return EnvSpec(
+            agent_ids=self.agent_ids,
+            observations={a: obs for a in self.agent_ids},
+            actions={a: DiscreteSpec(self.num_actions) for a in self.agent_ids},
+            # overridden by the registry's ConcatObsState wrapper
+            state=ArraySpec((0,)),
+        )
+
+    def _obs(self, state: LbfState):
+        scale = float(self.grid_size - 1)
+        lvl_scale = float(self.num_agents * self.max_level)
+        out = {}
+        for i, a in enumerate(self.agent_ids):
+            own = state.pos[i].astype(jnp.float32) / scale
+            own_lvl = (state.levels[i].astype(jnp.float32) / self.max_level)[None]
+            food_rel = (state.food_pos - state.pos[i]).astype(jnp.float32) / scale
+            food_feats = jnp.concatenate(
+                [
+                    food_rel.reshape(-1),
+                    state.food_level.astype(jnp.float32) / lvl_scale,
+                    state.food_active.astype(jnp.float32),
+                ]
+            )
+            others = jnp.delete(state.pos, i, axis=0, assume_unique_indices=True)
+            other_lvl = jnp.delete(
+                state.levels, i, axis=0, assume_unique_indices=True
+            )
+            other_feats = jnp.concatenate(
+                [
+                    ((others - state.pos[i]).astype(jnp.float32) / scale).reshape(-1),
+                    other_lvl.astype(jnp.float32) / self.max_level,
+                ]
+            )
+            out[a] = jnp.concatenate([own, own_lvl, food_feats, other_feats])
+        return out
+
+    def reset(self, key):
+        k_cells, k_al, k_fl = jax.random.split(key, 3)
+        cells = sample_distinct_cells(
+            k_cells, self.grid_size, self.num_agents + self.num_food
+        )
+        levels = jax.random.randint(
+            k_al, (self.num_agents,), 1, self.max_level + 1
+        )
+        # every food is collectible by the full team acting together
+        food_level = jax.random.randint(
+            k_fl, (self.num_food,), 1, jnp.sum(levels) + 1
+        )
+        state = LbfState(
+            t=jnp.zeros((), jnp.int32),
+            pos=cells[: self.num_agents],
+            levels=levels,
+            food_pos=cells[self.num_agents :],
+            food_level=food_level,
+            food_active=jnp.ones((self.num_food,), bool),
+        )
+        return state, restart(self.agent_ids, self._obs(state))
+
+    def step(self, state: LbfState, actions):
+        acts = jnp.stack([actions[a] for a in self.agent_ids])  # (N,)
+
+        # --- movement: food cells are solid
+        proposed = apply_moves(state.pos, acts, self.grid_size)
+        blocked = hits_cells(proposed, state.food_pos, state.food_active)
+        pos = resolve_collisions(state.pos, proposed, blocked)
+
+        # --- loading: adjacent loaders pool their levels per food
+        adjacent = (
+            jnp.abs(pos[:, None] - state.food_pos[None, :]).sum(-1) == 1
+        )  # (N, F)
+        loading = (acts == 5)[:, None] & adjacent & state.food_active[None, :]
+        pooled = (state.levels[:, None] * loading).sum(0)  # (F,)
+        collected = state.food_active & (pooled >= state.food_level) & (pooled > 0)
+
+        # level-proportional shares, normalised by the total food level
+        total_level = jnp.sum(state.food_level).astype(jnp.float32)
+        share = (
+            loading * state.levels[:, None].astype(jnp.float32)
+        ) / jnp.clip(pooled, 1, None)[None, :].astype(jnp.float32)
+        gains = (collected * state.food_level).astype(jnp.float32)
+        r_agents = (share * gains[None, :]).sum(1) / total_level  # (N,)
+        if self.shared_reward:
+            r_agents = jnp.full_like(r_agents, jnp.mean(r_agents))
+        reward = {a: r_agents[i] for i, a in enumerate(self.agent_ids)}
+
+        food_active = state.food_active & ~collected
+        t = state.t + 1
+        new_state = LbfState(
+            t=t,
+            pos=pos,
+            levels=state.levels,
+            food_pos=state.food_pos,
+            food_level=state.food_level,
+            food_active=food_active,
+        )
+        done = (t >= self.horizon) | ~food_active.any()
+        return new_state, transition(
+            self.agent_ids, reward, self._obs(new_state), done
+        )

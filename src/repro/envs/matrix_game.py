@@ -17,10 +17,9 @@ from repro.envs.api import (
     ArraySpec,
     DiscreteSpec,
     EnvSpec,
-    StepType,
-    TimeStep,
     agent_ids,
-    shared_reward,
+    restart,
+    transition,
 )
 
 CLIMBING = jnp.array(
@@ -83,13 +82,7 @@ class MatrixGame:
         state = MatrixGameState(
             t=jnp.zeros((), jnp.int32), last_joint=jnp.zeros((2,), jnp.int32)
         )
-        ts = TimeStep(
-            step_type=jnp.asarray(StepType.FIRST, jnp.int32),
-            reward=shared_reward(self.agent_ids, jnp.zeros(())),
-            discount=jnp.ones(()),
-            observation=self._obs(state),
-        )
-        return state, ts
+        return state, restart(self.agent_ids, self._obs(state))
 
     def step(self, state: MatrixGameState, actions):
         a0 = actions["agent_0"]
@@ -98,10 +91,4 @@ class MatrixGame:
         t = state.t + 1
         new_state = MatrixGameState(t=t, last_joint=jnp.stack([a0, a1]))
         done = t >= self.horizon
-        ts = TimeStep(
-            step_type=jnp.where(done, StepType.LAST, StepType.MID).astype(jnp.int32),
-            reward=shared_reward(self.agent_ids, r),
-            discount=jnp.where(done, 0.0, 1.0),
-            observation=self._obs(new_state),
-        )
-        return new_state, ts
+        return new_state, transition(self.agent_ids, r, self._obs(new_state), done)

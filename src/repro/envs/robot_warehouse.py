@@ -1,0 +1,206 @@
+"""Robot Warehouse (RWARE-lite) in pure JAX — the paper's flagship gridworld.
+
+N robots navigate a warehouse of static shelf racks.  A rotating subset of
+shelves is *requested*: a robot on a requested shelf's rack cell can load
+it (action 5), carry it to the goal cell and — on arrival — deliver it for
+a sparse shared team reward of +1.  Delivered shelves snap back to their
+rack and a fresh request is sampled, keeping ``num_requests`` outstanding
+(the lite stand-in for RWARE's return-trip: pickup → delivery → new
+request).  Robots collide: contested moves are cancelled (one robot per
+cell), and a loaded robot cannot pass under an occupied rack.
+
+Actions: 0 noop, 1..4 cardinal moves, 5 load (pickup only — no drop;
+a loaded shelf is shed by delivering it at the goal).  Reward is sparse
+and shared — the hard-exploration regime the original RWARE benchmarks
+probe.  Global state and agent-id observation features come from the
+wrapper stack (`AgentIdObs` + `ConcatObsState`), not per-env code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.api import DiscreteSpec, ArraySpec, EnvSpec, agent_ids, restart, transition
+from repro.envs.grid import apply_moves, hits_cells, resolve_collisions
+
+
+class RwareState(NamedTuple):
+    t: jnp.ndarray          # () int32
+    pos: jnp.ndarray        # (N, 2) int32 robot cells
+    carrying: jnp.ndarray   # (N,) int32 shelf index, -1 = unloaded
+    requested: jnp.ndarray  # (S,) bool
+    key: jnp.ndarray        # PRNG for replacement request sampling
+
+
+@dataclasses.dataclass(frozen=True)
+class RobotWarehouse:
+    num_agents: int = 2
+    grid_size: int = 8
+    num_shelves: int = 8
+    num_requests: int = 2
+    horizon: int = 64
+
+    def __post_init__(self):
+        if self.num_requests > self.num_shelves:
+            raise ValueError("num_requests cannot exceed num_shelves")
+        if len(self._shelf_cells()) < self.num_shelves:
+            raise ValueError(
+                f"grid_size {self.grid_size} fits only "
+                f"{len(self._shelf_cells())} shelves, not {self.num_shelves}"
+            )
+
+    @property
+    def agent_ids(self):
+        return agent_ids(self.num_agents)
+
+    @property
+    def num_actions(self):
+        return 6  # noop + 4 moves + load
+
+    def _shelf_cells(self):
+        """Static rack layout: shelf rows every other row, aisles around."""
+        cells = [
+            (r, c)
+            for r in range(2, self.grid_size - 2, 2)
+            for c in range(1, self.grid_size - 1)
+        ]
+        return cells[: self.num_shelves]
+
+    @property
+    def shelf_pos(self):
+        return jnp.asarray(self._shelf_cells(), jnp.int32)
+
+    def _goal_cell(self):
+        return (self.grid_size - 1, self.grid_size // 2)
+
+    @property
+    def goal_pos(self):
+        return jnp.asarray(self._goal_cell(), jnp.int32)
+
+    @property
+    def _free_cells(self):
+        """Spawnable cells: not a rack, not the goal."""
+        taken = set(self._shelf_cells()) | {self._goal_cell()}
+        free = [
+            (r, c)
+            for r in range(self.grid_size)
+            for c in range(self.grid_size)
+            if (r, c) not in taken
+        ]
+        return jnp.asarray(free, jnp.int32)
+
+    def obs_dim(self) -> int:
+        # own pos(2) + carrying(1) + rel goal(2)
+        # + per shelf: rel(2) + requested(1) + present(1)
+        # + per other agent: rel(2)
+        return 5 + 4 * self.num_shelves + 2 * (self.num_agents - 1)
+
+    def spec(self) -> EnvSpec:
+        obs = ArraySpec((self.obs_dim(),))
+        return EnvSpec(
+            agent_ids=self.agent_ids,
+            observations={a: obs for a in self.agent_ids},
+            actions={a: DiscreteSpec(self.num_actions) for a in self.agent_ids},
+            # the registry wraps this env in ConcatObsState, which overrides
+            # the global state with the concat-of-observations rule
+            state=ArraySpec((0,)),
+        )
+
+    def _present(self, carrying):
+        """Which shelves are at their rack (not loaded on a robot)."""
+        return ~(
+            (carrying[:, None] == jnp.arange(self.num_shelves)[None, :]).any(0)
+        )
+
+    def _obs(self, state: RwareState):
+        scale = float(self.grid_size - 1)
+        present = self._present(state.carrying)
+        out = {}
+        for i, a in enumerate(self.agent_ids):
+            own = state.pos[i].astype(jnp.float32) / scale
+            loaded = (state.carrying[i] >= 0).astype(jnp.float32)[None]
+            goal_rel = (self.goal_pos - state.pos[i]).astype(jnp.float32) / scale
+            shelf_rel = (self.shelf_pos - state.pos[i]).astype(jnp.float32) / scale
+            shelf_feats = jnp.concatenate(
+                [
+                    shelf_rel.reshape(-1),
+                    state.requested.astype(jnp.float32),
+                    present.astype(jnp.float32),
+                ]
+            )
+            others = jnp.delete(state.pos, i, axis=0, assume_unique_indices=True)
+            others_rel = (others - state.pos[i]).astype(jnp.float32) / scale
+            out[a] = jnp.concatenate(
+                [own, loaded, goal_rel, shelf_feats, others_rel.reshape(-1)]
+            )
+        return out
+
+    def reset(self, key):
+        k_pos, k_req, k_state = jax.random.split(key, 3)
+        free = self._free_cells
+        idx = jax.random.permutation(k_pos, free.shape[0])[: self.num_agents]
+        req_idx = jax.random.permutation(k_req, self.num_shelves)[: self.num_requests]
+        state = RwareState(
+            t=jnp.zeros((), jnp.int32),
+            pos=free[idx],
+            carrying=jnp.full((self.num_agents,), -1, jnp.int32),
+            requested=jnp.zeros((self.num_shelves,), bool).at[req_idx].set(True),
+            key=k_state,
+        )
+        return state, restart(self.agent_ids, self._obs(state))
+
+    def step(self, state: RwareState, actions):
+        acts = jnp.stack([actions[a] for a in self.agent_ids])  # (N,)
+        present = self._present(state.carrying)
+
+        # --- movement: loaded robots cannot pass under an occupied rack
+        proposed = apply_moves(state.pos, acts, self.grid_size)
+        blocked = hits_cells(proposed, self.shelf_pos, present) & (
+            state.carrying >= 0
+        )
+        pos = resolve_collisions(state.pos, proposed, blocked)
+
+        # --- load: pick the requested, present shelf under the robot
+        on_shelf = jnp.all(pos[:, None] == self.shelf_pos[None, :], axis=-1)
+        pickable = on_shelf & (present & state.requested)[None, :]
+        can_pick = (acts == 5) & (state.carrying < 0) & pickable.any(-1)
+        carrying = jnp.where(
+            can_pick, jnp.argmax(pickable, axis=-1), state.carrying
+        )
+
+        # --- delivery: a loaded robot on the goal cell scores (at most one
+        # robot can occupy the goal, so deliveries never contend)
+        deliver = jnp.all(pos == self.goal_pos, axis=-1) & (carrying >= 0)
+        shelf_ids = jnp.arange(self.num_shelves)
+        requested = state.requested & ~(
+            (shelf_ids[None, :] == carrying[:, None]) & deliver[:, None]
+        ).any(0)
+        carrying = jnp.where(deliver, -1, carrying)
+
+        # --- replacement requests keep num_requests outstanding
+        key, k_new = jax.random.split(state.key)
+
+        def draw(carry, i):
+            req, k = carry
+            k, kk = jax.random.split(k)
+            logits = jnp.where(req, -1e9, 0.0)  # uniform over unrequested
+            j = jax.random.categorical(kk, logits)
+            req = jnp.where(deliver[i], req.at[j].set(True), req)
+            return (req, k), None
+
+        (requested, _), _ = jax.lax.scan(
+            draw, (requested, k_new), jnp.arange(self.num_agents)
+        )
+
+        t = state.t + 1
+        new_state = RwareState(
+            t=t, pos=pos, carrying=carrying, requested=requested, key=key
+        )
+        r = jnp.sum(deliver.astype(jnp.float32))  # sparse team reward
+        done = t >= self.horizon
+        return new_state, transition(
+            self.agent_ids, r, self._obs(new_state), done
+        )

@@ -21,10 +21,9 @@ from repro.envs.api import (
     ArraySpec,
     DiscreteSpec,
     EnvSpec,
-    StepType,
-    TimeStep,
     agent_ids,
-    shared_reward,
+    restart,
+    transition,
 )
 
 _MOVES = jnp.array([[0.0, 0.0], [1.0, 0.0], [-1.0, 0.0], [0.0, 1.0], [0.0, -1.0]])
@@ -116,13 +115,7 @@ class SmaxLite:
             enemy_pos=enemy,
             enemy_hp=jnp.full((n,), self.max_hp),
         )
-        ts = TimeStep(
-            step_type=jnp.asarray(StepType.FIRST, jnp.int32),
-            reward=shared_reward(self.agent_ids, jnp.zeros(())),
-            discount=jnp.ones(()),
-            observation=self._obs(state),
-        )
-        return state, ts
+        return state, restart(self.agent_ids, self._obs(state))
 
     def step(self, state: SmaxState, actions):
         n = self.num_agents
@@ -193,10 +186,4 @@ class SmaxLite:
             + 10.0 * jnp.sum(killed)
             + 200.0 * all_enemies_dead
         ) / max_ret * 20.0
-        ts = TimeStep(
-            step_type=jnp.where(done, StepType.LAST, StepType.MID).astype(jnp.int32),
-            reward=shared_reward(self.agent_ids, r),
-            discount=jnp.where(done, 0.0, 1.0),
-            observation=self._obs(new_state),
-        )
-        return new_state, ts
+        return new_state, transition(self.agent_ids, r, self._obs(new_state), done)

@@ -18,9 +18,8 @@ from repro.envs.api import (
     ArraySpec,
     DiscreteSpec,
     EnvSpec,
-    StepType,
-    TimeStep,
-    shared_reward,
+    restart,
+    transition,
 )
 
 _DIRS = jnp.array([[0.0, 0.0], [1.0, 0.0], [-1.0, 0.0], [0.0, 1.0], [0.0, -1.0]])
@@ -97,13 +96,7 @@ class SpeakerListener:
             target=target,
             last_msg=jnp.zeros((), jnp.int32),
         )
-        ts = TimeStep(
-            step_type=jnp.asarray(StepType.FIRST, jnp.int32),
-            reward=shared_reward(self.agent_ids, jnp.zeros(())),
-            discount=jnp.ones(()),
-            observation=self._obs(state),
-        )
-        return state, ts
+        return state, restart(self.agent_ids, self._obs(state))
 
     def step(self, state: SLState, actions):
         msg = actions["speaker"]
@@ -121,10 +114,4 @@ class SpeakerListener:
             last_msg=msg,
         )
         done = t >= self.horizon
-        ts = TimeStep(
-            step_type=jnp.where(done, StepType.LAST, StepType.MID).astype(jnp.int32),
-            reward=shared_reward(self.agent_ids, r),
-            discount=jnp.where(done, 0.0, 1.0),
-            observation=self._obs(new_state),
-        )
-        return new_state, ts
+        return new_state, transition(self.agent_ids, r, self._obs(new_state), done)

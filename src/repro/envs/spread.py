@@ -17,10 +17,9 @@ from repro.envs.api import (
     ArraySpec,
     DiscreteSpec,
     EnvSpec,
-    StepType,
-    TimeStep,
     agent_ids,
-    shared_reward,
+    restart,
+    transition,
 )
 
 _DIRS = jnp.array([[0.0, 0.0], [1.0, 0.0], [-1.0, 0.0], [0.0, 1.0], [0.0, -1.0]])
@@ -87,13 +86,7 @@ class Spread:
         state = SpreadState(
             t=jnp.zeros((), jnp.int32), pos=pos, vel=jnp.zeros_like(pos), landmarks=lm
         )
-        ts = TimeStep(
-            step_type=jnp.asarray(StepType.FIRST, jnp.int32),
-            reward=shared_reward(self.agent_ids, jnp.zeros(())),
-            discount=jnp.ones(()),
-            observation=self._obs(state),
-        )
-        return state, ts
+        return state, restart(self.agent_ids, self._obs(state))
 
     def _forces(self, actions):
         fs = []
@@ -123,10 +116,4 @@ class Spread:
 
         new_state = SpreadState(t=t, pos=pos, vel=vel, landmarks=state.landmarks)
         done = t >= self.horizon
-        ts = TimeStep(
-            step_type=jnp.where(done, StepType.LAST, StepType.MID).astype(jnp.int32),
-            reward=shared_reward(self.agent_ids, r),
-            discount=jnp.where(done, 0.0, 1.0),
-            observation=self._obs(new_state),
-        )
-        return new_state, ts
+        return new_state, transition(self.agent_ids, r, self._obs(new_state), done)

@@ -22,10 +22,9 @@ from repro.envs.api import (
     ArraySpec,
     DiscreteSpec,
     EnvSpec,
-    StepType,
-    TimeStep,
     agent_ids,
-    shared_reward,
+    restart,
+    transition,
 )
 
 
@@ -83,13 +82,7 @@ class SwitchGame:
             has_been=in_room > 0,
             key=key,
         )
-        ts = TimeStep(
-            step_type=jnp.asarray(StepType.FIRST, jnp.int32),
-            reward=shared_reward(self.agent_ids, jnp.zeros(())),
-            discount=jnp.ones(()),
-            observation=self._obs(state),
-        )
-        return state, ts
+        return state, restart(self.agent_ids, self._obs(state))
 
     def step(self, state: SwitchState, actions):
         # Tell only counts for the agent in the room.
@@ -109,10 +102,6 @@ class SwitchGame:
             key=key,
         )
         done = tell | (t >= self.horizon)
-        ts = TimeStep(
-            step_type=jnp.where(done, StepType.LAST, StepType.MID).astype(jnp.int32),
-            reward=shared_reward(self.agent_ids, reward),
-            discount=jnp.where(done, 0.0, 1.0),
-            observation=self._obs(new_state),
+        return new_state, transition(
+            self.agent_ids, reward, self._obs(new_state), done
         )
-        return new_state, ts

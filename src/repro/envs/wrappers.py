@@ -1,0 +1,240 @@
+"""Composable environment wrappers (the plumbing layer of `repro.envs`).
+
+Every wrapper is a frozen dataclass around an inner env and preserves the
+pure-functional env contract — ``reset(key)``, ``step(state, actions)``,
+``global_state(state)``, ``spec()`` — so wrapped envs stay vmap-able across
+copies and scannable across time (the Anakin fusion property).  Wrappers
+compose freely; attributes they don't override (``horizon``, ``agent_ids``,
+...) delegate to the inner env.
+
+Two families:
+
+* **observation wrappers** (state passes through unchanged):
+    - `AgentIdObs` — append a one-hot agent id to every observation, so
+      shared-weight policies on homogeneous envs stay agent-aware;
+    - `ConcatObsState` — synthesize the global state (centralised critics,
+      QMIX mixers) as the concatenation of all agents' observations, for
+      envs whose observations jointly carry the full state.
+* **stream wrappers** (wrap the state in their own NamedTuple):
+    - `AutoReset` — fused auto-reset: when the inner env terminates, the
+      state is reset *in the same step* and the returned timestep is the
+      FIRST of the new episode carrying the terminal reward/discount
+      (Brax/Jumanji-style merged boundary; see the class docstring);
+    - `EpisodeStats` — accumulate per-agent episode returns and lengths
+      inside the state, publishing them at every episode boundary.
+
+The three runners in `repro.core.system` build their reset/global-state
+plumbing from this stack instead of per-runner ad-hoc code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.api import ArraySpec, TimeStep
+
+
+@dataclasses.dataclass(frozen=True)
+class Wrapper:
+    """Base wrapper: delegate the env protocol (and any attribute) inward."""
+
+    env: Any
+
+    def __getattr__(self, name):
+        # only reached for attributes not defined on the wrapper itself
+        return getattr(self.env, name)
+
+    def spec(self):
+        return self.env.spec()
+
+    def reset(self, key):
+        return self.env.reset(key)
+
+    def step(self, state, actions):
+        return self.env.step(state, actions)
+
+    def global_state(self, state):
+        return self.env.global_state(state)
+
+
+# ------------------------------------------------------ observation wrappers
+
+
+@dataclasses.dataclass(frozen=True)
+class AgentIdObs(Wrapper):
+    """Append a one-hot agent id to every agent's observation.
+
+    The standard trick for shared-weight policies on homogeneous envs
+    (Mava/JaxMARL's ``add_agent_id``): identical network weights can still
+    condition on *which* agent they are acting for.
+    """
+
+    def spec(self):
+        spec = self.env.spec()
+        n = spec.num_agents
+        obs = {
+            a: ArraySpec((spec.observations[a].shape[0] + n,), spec.observations[a].dtype)
+            for a in spec.agent_ids
+        }
+        return dataclasses.replace(spec, observations=obs)
+
+    def _augment(self, obs):
+        ids = tuple(self.env.agent_ids)
+        n = len(ids)
+        return {
+            a: jnp.concatenate([obs[a], jax.nn.one_hot(i, n, dtype=obs[a].dtype)])
+            for i, a in enumerate(ids)
+        }
+
+    def _obs(self, state):
+        return self._augment(self.env._obs(state))
+
+    def reset(self, key):
+        state, ts = self.env.reset(key)
+        return state, ts._replace(observation=self._augment(ts.observation))
+
+    def step(self, state, actions):
+        state, ts = self.env.step(state, actions)
+        return state, ts._replace(observation=self._augment(ts.observation))
+
+
+@dataclasses.dataclass(frozen=True)
+class ConcatObsState(Wrapper):
+    """Global state = concatenation of every agent's observation.
+
+    For envs whose joint observations carry the full environment state,
+    this replaces a hand-rolled ``global_state`` with one shared rule —
+    the input centralised critics (MAPPO) and mixers (QMIX) train on.
+    Requires the inner env to expose ``_obs(state)`` (all repro envs do).
+    """
+
+    def spec(self):
+        spec = self.env.spec()
+        dim = sum(spec.observations[a].shape[0] for a in spec.agent_ids)
+        return dataclasses.replace(spec, state=ArraySpec((dim,)))
+
+    def global_state(self, state):
+        obs = self.env._obs(state)
+        return jnp.concatenate([obs[a] for a in tuple(self.env.agent_ids)])
+
+
+# ----------------------------------------------------------- stream wrappers
+
+
+class AutoResetState(NamedTuple):
+    key: Any     # PRNG key consumed by the next auto-reset
+    inner: Any   # the wrapped env's state
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoReset(Wrapper):
+    """Fused auto-reset: terminated envs restart inside the same `step`.
+
+    When the inner env emits LAST, the state is immediately re-initialised
+    from the wrapper's stored key and the returned timestep is *merged*:
+    step_type FIRST and the reset observation (the new episode begins),
+    but the terminal step's reward and discount (so the ending episode's
+    final reward is never lost, and bootstrap terms — which every trainer
+    gates on ``discount`` — are correctly zeroed).  The inner LAST is thus
+    followed by a FIRST with no host round trip and no wasted step, which
+    is what lets a training scan run across episode boundaries.
+
+    Standalone use draws reset randomness from the key stored at `reset`
+    (advanced with `fold_in` every step); runners that need reproducible
+    streams refresh it each iteration via `replace_reset_keys`.
+    """
+
+    def reset(self, key):
+        inner, ts = self.env.reset(key)
+        return AutoResetState(key=jax.random.fold_in(key, 1), inner=inner), ts
+
+    def step(self, state, actions):
+        inner, ts = self.env.step(state.inner, actions)
+        reset_inner, reset_ts = self.env.reset(state.key)
+        done = ts.last()
+
+        def sel(new, old):
+            return jax.tree_util.tree_map(
+                lambda n, o: jnp.where(done, n, o), new, old
+            )
+
+        merged = TimeStep(
+            step_type=jnp.where(done, reset_ts.step_type, ts.step_type),
+            reward=ts.reward,
+            discount=ts.discount,
+            observation=sel(reset_ts.observation, ts.observation),
+        )
+        new_state = AutoResetState(
+            key=jax.random.fold_in(state.key, 0), inner=sel(reset_inner, inner)
+        )
+        return new_state, merged
+
+    def global_state(self, state):
+        return self.env.global_state(state.inner)
+
+
+class EpisodeStatsState(NamedTuple):
+    inner: Any
+    returns: Dict[str, Any]       # running per-agent return, current episode
+    length: Any                   # () int32 — steps taken this episode
+    last_returns: Dict[str, Any]  # per-agent return of the last completed episode
+    last_length: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class EpisodeStats(Wrapper):
+    """Accumulate per-agent episode returns/lengths inside the env state.
+
+    An episode completes on a raw LAST, or on the merged FIRST an
+    `AutoReset` layer emits at a boundary (whose reward is the terminal
+    one) — so the wrapper composes both outside `AutoReset` (fused
+    training) and directly over a raw env (the python environment loop).
+    Completed-episode stats are published in ``last_returns`` /
+    ``last_length`` and persist until the next boundary.
+    """
+
+    def _zero_stats(self):
+        z = {a: jnp.zeros(()) for a in tuple(self.env.agent_ids)}
+        zero_i = jnp.zeros((), jnp.int32)
+        return z, zero_i
+
+    def reset(self, key):
+        inner, ts = self.env.reset(key)
+        z, zero_i = self._zero_stats()
+        return EpisodeStatsState(inner, z, zero_i, dict(z), zero_i), ts
+
+    def step(self, state, actions):
+        inner, ts = self.env.step(state.inner, actions)
+        completed = ts.last() | ts.first()
+        ret = {a: state.returns[a] + ts.reward[a] for a in state.returns}
+        length = state.length + 1
+        new_state = EpisodeStatsState(
+            inner=inner,
+            returns={a: jnp.where(completed, 0.0, ret[a]) for a in ret},
+            length=jnp.where(completed, 0, length),
+            last_returns={
+                a: jnp.where(completed, ret[a], state.last_returns[a]) for a in ret
+            },
+            last_length=jnp.where(completed, length, state.last_length),
+        )
+        return new_state, ts
+
+    def global_state(self, state):
+        return self.env.global_state(state.inner)
+
+
+def replace_reset_keys(state, keys):
+    """Swap the `AutoReset` key wherever it sits in a wrapper-state stack.
+
+    Runners use this to drive auto-reset randomness from their own key
+    stream (one fresh key per env copy per iteration), making training
+    a reproducible function of the runner key alone.
+    """
+    if isinstance(state, AutoResetState):
+        return state._replace(key=keys)
+    if hasattr(state, "inner") and hasattr(state, "_replace"):
+        return state._replace(inner=replace_reset_keys(state.inner, keys))
+    raise TypeError("state stack contains no AutoReset layer")

@@ -83,8 +83,8 @@ def _fa_kernel(
 
     @pl.when(ik == num_kv_blocks - 1)
     def _finalize():
-        l = jnp.maximum(l_ref[...], 1e-30)  # (bq, 1)
-        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        norm = jnp.maximum(l_ref[...], 1e-30)  # (bq, 1)
+        o_ref[0, 0] = (acc_ref[...] / norm).astype(o_ref.dtype)
 
 
 def flash_attention_kernel(

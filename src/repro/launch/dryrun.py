@@ -16,7 +16,6 @@ collective schedule (for EXPERIMENTS.md §Dry-run / §Roofline).
 """
 
 import argparse
-import functools
 import json
 import sys
 import time

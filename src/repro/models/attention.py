@@ -13,7 +13,7 @@ that is what makes `long_500k` sub-quadratic (O(S * W)) for dense archs.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,6 @@ each invocation with its own KV-cache slice.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

@@ -13,7 +13,6 @@ TPU adaptation notes (see DESIGN.md §3):
 from __future__ import annotations
 
 import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,7 @@ from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 from repro.roofline.hlo_cost import Cost, module_cost
 
 # re-exported for compatibility with earlier imports
-from repro.roofline.hlo_cost import COLLECTIVE_KINDS
+from repro.roofline.hlo_cost import COLLECTIVE_KINDS  # noqa: F401
 
 
 def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:

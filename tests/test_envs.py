@@ -1,12 +1,29 @@
-"""Environment API invariants (hypothesis property tests + spec conformance)."""
+"""Environment API invariants: one parametrized spec-conformance suite.
+
+Every env in ``repro.envs.REGISTRY`` (including wrapped registry stacks)
+passes the same checks — reset/step outputs match the `EnvSpec` shapes and
+dtypes, vmap across copies equals independent envs, determinism under a
+fixed key, and auto-reset emits FIRST after the inner LAST — replacing
+per-env shape boilerplate.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.envs import REGISTRY
+from repro.envs import AutoReset, REGISTRY, make_env
 from repro.envs.api import StepType
+
+# small instances so the conformance scans stay cheap
+SMALL_KWARGS = {
+    "robot_warehouse": {"horizon": 12, "grid_size": 6, "num_shelves": 4},
+    "lbf": {"horizon": 12, "grid_size": 5, "num_food": 2},
+}
+
+
+def small_env(name):
+    return make_env(name, **SMALL_KWARGS.get(name, {}))
 
 
 def random_actions(spec, rng):
@@ -22,25 +39,31 @@ def random_actions(spec, rng):
 
 @pytest.mark.parametrize("name", sorted(REGISTRY))
 def test_spec_conformance(name):
-    env = REGISTRY[name]()
+    env = small_env(name)
     spec = env.spec()
     state, ts = jax.jit(env.reset)(jax.random.key(0))
     assert int(ts.step_type) == StepType.FIRST
+    assert float(ts.discount) == 1.0
+    assert set(ts.observation) == set(spec.agent_ids) == set(ts.reward)
     rng = np.random.default_rng(0)
     step = jax.jit(env.step)
     for _ in range(5):
         state, ts = step(state, random_actions(spec, rng))
         for a in spec.agent_ids:
-            assert ts.observation[a].shape == spec.observations[a].shape
-            assert np.isfinite(np.asarray(ts.observation[a])).all()
+            ob = jnp.asarray(ts.observation[a])
+            assert ob.shape == spec.observations[a].shape
+            assert ob.dtype == spec.observations[a].dtype
+            assert np.isfinite(np.asarray(ob)).all()
             assert np.isfinite(float(ts.reward[a]))
+        assert float(ts.discount) in (0.0, 1.0)
         gs = env.global_state(state)
         assert gs.shape == spec.state.shape
+        assert jnp.asarray(gs).dtype == spec.state.dtype
 
 
 @pytest.mark.parametrize("name", sorted(REGISTRY))
 def test_determinism_same_key(name):
-    env = REGISTRY[name]()
+    env = small_env(name)
     spec = env.spec()
     rng = np.random.default_rng(1)
     acts = random_actions(spec, rng)
@@ -56,7 +79,7 @@ def test_determinism_same_key(name):
 @pytest.mark.parametrize("name", sorted(REGISTRY))
 def test_vmap_matches_single(name):
     """Vectorised env == N independent envs (the Anakin correctness premise)."""
-    env = REGISTRY[name]()
+    env = small_env(name)
     spec = env.spec()
     keys = jax.random.split(jax.random.key(3), 4)
     rng = np.random.default_rng(2)
@@ -73,6 +96,34 @@ def test_vmap_matches_single(name):
                 np.asarray(bts.observation[a][i]), np.asarray(ts.observation[a]),
                 rtol=1e-6, atol=1e-6,
             )
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_auto_reset_emits_first_after_last(name):
+    """Wrapped in AutoReset, the inner LAST is followed by a fused FIRST.
+
+    The merged boundary timestep carries step_type FIRST (the new episode's
+    reset observation) with the terminal discount, LAST never surfaces, and
+    the episode stream keeps going past the boundary.
+    """
+    env = AutoReset(small_env(name))
+    spec = env.spec()
+    state, ts = env.reset(jax.random.key(5))
+    rng = np.random.default_rng(4)
+    step = jax.jit(env.step)
+    boundaries = 0
+    for _ in range(int(env.horizon) + 3):
+        state, ts = step(state, random_actions(spec, rng))
+        kind = int(ts.step_type)
+        assert kind != StepType.LAST  # auto-reset swallows LAST...
+        if kind == StepType.FIRST:
+            boundaries += 1  # ...and emits the next episode's FIRST
+            assert float(ts.discount) == 0.0  # terminal discount rides along
+            for a in spec.agent_ids:  # reset observation, right spec
+                assert ts.observation[a].shape == spec.observations[a].shape
+    # every env terminates within its horizon, so stepping horizon+3 times
+    # must have crossed at least one boundary
+    assert boundaries >= 1
 
 
 @settings(max_examples=20, deadline=None)

@@ -1,0 +1,193 @@
+"""RWARE-lite and Level-Based Foraging mechanics (raw-env unit tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.envs.api import StepType
+from repro.envs.grid import apply_moves, resolve_collisions
+from repro.envs.lbf import LbfState, LevelBasedForaging
+from repro.envs.robot_warehouse import RobotWarehouse, RwareState
+
+
+def acts(env, values):
+    return {
+        a: jnp.asarray(v, jnp.int32) for a, v in zip(env.agent_ids, values)
+    }
+
+
+# ------------------------------------------------------------ shared grid
+
+
+def test_apply_moves_clips_to_grid():
+    pos = jnp.array([[0, 0], [4, 4]], jnp.int32)
+    out = apply_moves(pos, jnp.array([1, 2]), 5)  # up at top, down at bottom
+    np.testing.assert_array_equal(np.asarray(out), [[0, 0], [4, 4]])
+
+
+def test_resolve_collisions_contested_cell():
+    # both agents propose (1, 1): both stay put
+    pos = jnp.array([[1, 0], [1, 2]], jnp.int32)
+    proposed = jnp.array([[1, 1], [1, 1]], jnp.int32)
+    out = resolve_collisions(pos, proposed)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(pos))
+
+
+def test_resolve_collisions_swap_blocked():
+    pos = jnp.array([[0, 0], [0, 1]], jnp.int32)
+    proposed = jnp.array([[0, 1], [0, 0]], jnp.int32)  # swap
+    out = resolve_collisions(pos, proposed)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(pos))
+
+
+def test_resolve_collisions_free_move_passes():
+    pos = jnp.array([[0, 0], [3, 3]], jnp.int32)
+    proposed = jnp.array([[0, 1], [3, 2]], jnp.int32)
+    out = resolve_collisions(pos, proposed)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(proposed))
+
+
+# ----------------------------------------------------------------- rware
+
+
+def _rware():
+    return RobotWarehouse(num_agents=2, grid_size=8, num_shelves=4, num_requests=2)
+
+
+def _rware_state(env, pos, carrying, requested):
+    return RwareState(
+        t=jnp.zeros((), jnp.int32),
+        pos=jnp.asarray(pos, jnp.int32),
+        carrying=jnp.asarray(carrying, jnp.int32),
+        requested=jnp.asarray(requested, bool),
+        key=jax.random.key(0),
+    )
+
+
+def test_rware_load_picks_requested_shelf():
+    env = _rware()
+    shelf0 = tuple(int(x) for x in env.shelf_pos[0])
+    state = _rware_state(env, [shelf0, (0, 0)], [-1, -1], [True, True, False, False])
+    state, ts = env.step(state, acts(env, [5, 0]))  # agent_0 loads shelf 0
+    assert int(state.carrying[0]) == 0
+    assert int(state.carrying[1]) == -1
+    assert float(ts.reward["agent_0"]) == 0.0  # pickup alone pays nothing
+
+
+def test_rware_delivery_pays_team_and_resamples_request():
+    env = _rware()
+    goal = tuple(int(x) for x in env.goal_pos)
+    above = (goal[0] - 1, goal[1])
+    state = _rware_state(env, [above, (0, 0)], [1, -1], [True, True, False, False])
+    state, ts = env.step(state, acts(env, [2, 0]))  # move down onto the goal
+    assert tuple(int(x) for x in state.pos[0]) == goal
+    # sparse shared +1 for the whole team
+    assert float(ts.reward["agent_0"]) == 1.0
+    assert float(ts.reward["agent_1"]) == 1.0
+    # delivered shelf unloaded; a fresh request keeps num_requests outstanding
+    assert int(state.carrying[0]) == -1
+    assert int(state.requested.sum()) == env.num_requests
+
+
+def test_rware_loaded_robot_blocked_by_occupied_rack():
+    env = _rware()
+    shelf0 = tuple(int(x) for x in env.shelf_pos[0])
+    left = (shelf0[0], shelf0[1] - 1)
+    # agent_0 is loaded with shelf 1 and tries to move right under shelf 0
+    state = _rware_state(env, [left, (0, 0)], [1, -1], [True, True, False, False])
+    state, _ = env.step(state, acts(env, [4, 0]))
+    assert tuple(int(x) for x in state.pos[0]) == left  # blocked
+    # unloaded robots pass under racks freely
+    state = _rware_state(env, [left, (0, 0)], [-1, -1], [True, True, False, False])
+    state, _ = env.step(state, acts(env, [4, 0]))
+    assert tuple(int(x) for x in state.pos[0]) == shelf0
+
+
+def test_rware_episode_ends_on_horizon_only():
+    env = RobotWarehouse(num_agents=2, grid_size=6, num_shelves=4, horizon=5)
+    state, ts = env.reset(jax.random.key(0))
+    for t in range(1, 6):
+        state, ts = env.step(state, acts(env, [0, 0]))
+        expected = StepType.LAST if t == 5 else StepType.MID
+        assert int(ts.step_type) == expected
+
+
+# ------------------------------------------------------------------- lbf
+
+
+def _lbf(**kw):
+    kw.setdefault("num_agents", 2)
+    kw.setdefault("grid_size", 6)
+    kw.setdefault("num_food", 2)
+    return LevelBasedForaging(**kw)
+
+
+def _lbf_state(pos, levels, food_pos, food_level, food_active):
+    return LbfState(
+        t=jnp.zeros((), jnp.int32),
+        pos=jnp.asarray(pos, jnp.int32),
+        levels=jnp.asarray(levels, jnp.int32),
+        food_pos=jnp.asarray(food_pos, jnp.int32),
+        food_level=jnp.asarray(food_level, jnp.int32),
+        food_active=jnp.asarray(food_active, bool),
+    )
+
+
+def test_lbf_lone_agent_cannot_collect_high_food():
+    env = _lbf()
+    # food 0 (level 3) adjacent to agent 0 (level 1): loading alone fails
+    state = _lbf_state([(2, 1), (5, 5)], [1, 2], [(2, 2), (0, 0)], [3, 1], [True, True])
+    state, ts = env.step(state, acts(env, [5, 0]))
+    assert bool(state.food_active[0])
+    assert float(ts.reward["agent_0"]) == 0.0
+
+
+def test_lbf_pooled_levels_collect_and_split_by_level():
+    env = _lbf()
+    # both agents adjacent to food 0 (level 3); levels 1 + 2 >= 3
+    state = _lbf_state([(2, 1), (2, 3)], [1, 2], [(2, 2), (0, 0)], [3, 1], [True, True])
+    state, ts = env.step(state, acts(env, [5, 5]))
+    assert not bool(state.food_active[0])
+    total = 3 + 1  # normaliser: total food level
+    assert float(ts.reward["agent_0"]) == pytest.approx(3 * (1 / 3) / total)
+    assert float(ts.reward["agent_1"]) == pytest.approx(3 * (2 / 3) / total)
+
+
+def test_lbf_shared_reward_regime_pays_team_mean():
+    env = _lbf(shared_reward=True)
+    state = _lbf_state([(2, 1), (2, 3)], [1, 2], [(2, 2), (0, 0)], [3, 1], [True, True])
+    _, ts = env.step(state, acts(env, [5, 5]))
+    r0, r1 = float(ts.reward["agent_0"]), float(ts.reward["agent_1"])
+    assert r0 == r1 == pytest.approx((3 / 4) / 2)  # mean of the per-agent split
+
+
+def test_lbf_food_cells_are_solid():
+    env = _lbf()
+    state = _lbf_state([(2, 1), (5, 5)], [1, 1], [(2, 2), (0, 0)], [1, 1], [True, True])
+    state, _ = env.step(state, acts(env, [4, 0]))  # move right into the food
+    assert tuple(int(x) for x in state.pos[0]) == (2, 1)
+    # once collected, the cell opens up
+    state = _lbf_state([(2, 1), (5, 5)], [1, 1], [(2, 2), (0, 0)], [1, 1], [False, True])
+    state, _ = env.step(state, acts(env, [4, 0]))
+    assert tuple(int(x) for x in state.pos[0]) == (2, 2)
+
+
+def test_lbf_all_food_collected_terminates_early():
+    env = _lbf()
+    # one active level-1 food left, adjacent loader collects -> LAST
+    state = _lbf_state([(2, 1), (5, 5)], [1, 1], [(2, 2), (0, 0)], [1, 1], [True, False])
+    state, ts = env.step(state, acts(env, [5, 0]))
+    assert int(ts.step_type) == StepType.LAST
+    assert float(ts.discount) == 0.0
+
+
+def test_lbf_reward_regimes_same_team_total():
+    """Per-agent and shared regimes redistribute, not rescale, reward."""
+    for shared in (False, True):
+        env = _lbf(shared_reward=shared)
+        state = _lbf_state(
+            [(2, 1), (2, 3)], [2, 1], [(2, 2), (0, 0)], [3, 2], [True, True]
+        )
+        _, ts = env.step(state, acts(env, [5, 5]))
+        total = sum(float(r) for r in ts.reward.values())
+        assert total == pytest.approx(3 / 5)

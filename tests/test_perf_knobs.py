@@ -20,8 +20,8 @@ def _batch(cfg, B=2, S=48, seed=0):
 
 
 def _loss(cfg, params, batch):
-    l, _ = jax.jit(lambda p, b: M.forward_train(p, b, cfg))(params, batch)
-    return float(l)
+    loss, _ = jax.jit(lambda p, b: M.forward_train(p, b, cfg))(params, batch)
+    return float(loss)
 
 
 def test_causal_skip_matches_scanned_attention():

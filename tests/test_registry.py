@@ -4,8 +4,6 @@ The acceptance surface of the unified System API: each registered system,
 on each env its spec supports, must survive fused `train_anakin` iterations
 (including at least one trainer update) and one fused `evaluate` call.
 """
-import dataclasses
-
 import jax
 import numpy as np
 import pytest
@@ -21,6 +19,10 @@ ENV_KWARGS = {
     "spread": {"horizon": 8},
     "speaker_listener": {"horizon": 8},
     "smax_lite": {"horizon": 10},
+    "robot_warehouse": {
+        "horizon": 8, "grid_size": 6, "num_shelves": 4, "num_requests": 2,
+    },
+    "lbf": {"horizon": 8, "grid_size": 5, "num_food": 2},
 }
 
 # tiny configs so at least one update fires within a handful of iterations

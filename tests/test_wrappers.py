@@ -1,0 +1,188 @@
+"""The composable wrapper stack: obs transforms, auto-reset, episode stats."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.envs import (
+    AgentIdObs,
+    AutoReset,
+    ConcatObsState,
+    EpisodeStats,
+    MatrixGame,
+    Spread,
+    make_env,
+)
+from repro.envs.api import StepType
+from repro.envs.wrappers import AutoResetState, replace_reset_keys
+
+
+def _zeros_actions(env):
+    return {a: jnp.asarray(0, jnp.int32) for a in env.agent_ids}
+
+
+# ------------------------------------------------------------- AgentIdObs
+
+
+def test_agent_id_obs_appends_one_hot():
+    raw = Spread(num_agents=3)
+    env = AgentIdObs(raw)
+    spec, raw_spec = env.spec(), raw.spec()
+    n = raw_spec.num_agents
+    for a in spec.agent_ids:
+        assert spec.observations[a].shape[0] == raw_spec.observations[a].shape[0] + n
+    _, ts = env.reset(jax.random.key(0))
+    _, raw_ts = raw.reset(jax.random.key(0))
+    for i, a in enumerate(spec.agent_ids):
+        ob = np.asarray(ts.observation[a])
+        np.testing.assert_array_equal(ob[:-n], np.asarray(raw_ts.observation[a]))
+        np.testing.assert_array_equal(ob[-n:], np.eye(n)[i])
+
+
+# --------------------------------------------------------- ConcatObsState
+
+
+def test_concat_obs_state_matches_observations():
+    env = ConcatObsState(AgentIdObs(Spread(num_agents=2)))
+    spec = env.spec()
+    assert spec.state.shape[0] == sum(
+        spec.observations[a].shape[0] for a in spec.agent_ids
+    )
+    state, ts = env.reset(jax.random.key(1))
+    gs = np.asarray(env.global_state(state))
+    manual = np.concatenate(
+        [np.asarray(ts.observation[a]) for a in spec.agent_ids]
+    )
+    np.testing.assert_array_equal(gs, manual)
+
+
+# -------------------------------------------------------------- AutoReset
+
+
+def test_auto_reset_preserves_terminal_reward():
+    """The merged boundary timestep carries the terminal step's reward."""
+    raw = MatrixGame(horizon=3)
+    env = AutoReset(raw)
+    state, ts = env.reset(jax.random.key(0))
+    acts = _zeros_actions(env)
+    expected = float(raw.payoff[0, 0])  # joint action (0, 0) every step
+    for t in range(1, 4):
+        state, ts = env.step(state, acts)
+        assert float(ts.reward["agent_0"]) == expected
+    # step 3 terminated the inner env: merged FIRST, terminal discount
+    assert int(ts.step_type) == StepType.FIRST
+    assert float(ts.discount) == 0.0
+    # and the stream continues into episode 2
+    state, ts = env.step(state, acts)
+    assert int(ts.step_type) == StepType.MID
+
+
+def test_auto_reset_vmaps_across_copies():
+    env = AutoReset(make_env("lbf", grid_size=5, num_food=2, horizon=4))
+    keys = jax.random.split(jax.random.key(2), 3)
+    state, ts = jax.vmap(env.reset)(keys)
+    acts = {
+        a: jnp.zeros((3,), jnp.int32) for a in env.agent_ids
+    }
+    step = jax.jit(jax.vmap(env.step))
+    for _ in range(5):
+        state, ts = step(state, acts)
+    # noop-only play always runs to the horizon: all copies crossed exactly
+    # one boundary at step 4 and are mid-episode again at step 5
+    assert (np.asarray(ts.step_type) == StepType.MID).all()
+
+
+def test_replace_reset_keys_controls_reset_stream():
+    """Runners pin auto-reset randomness by swapping the stored key."""
+    env = EpisodeStats(AutoReset(Spread(num_agents=2, horizon=1)))
+    state, _ = env.reset(jax.random.key(3))
+    forced = jax.random.key(42)
+    state = replace_reset_keys(state, forced)
+    assert isinstance(state.inner, AutoResetState)
+    # horizon=1: the next step auto-resets using exactly `forced`
+    state, ts = env.step(state, _zeros_actions(env))
+    _, expected_ts = env.env.env.reset(forced)
+    for a in env.agent_ids:
+        np.testing.assert_array_equal(
+            np.asarray(ts.observation[a]), np.asarray(expected_ts.observation[a])
+        )
+
+
+# ----------------------------------------------------------- EpisodeStats
+
+
+def test_episode_stats_over_raw_env():
+    """Over a raw env, stats publish on LAST and match a manual sum."""
+    env = EpisodeStats(MatrixGame(horizon=4))
+    state, ts = env.reset(jax.random.key(0))
+    acts = _zeros_actions(env)
+    total = 0.0
+    while int(ts.step_type) != StepType.LAST:
+        state, ts = env.step(state, acts)
+        total += float(ts.reward["agent_0"])
+    assert float(state.last_returns["agent_0"]) == total
+    assert int(state.last_length) == 4
+    # accumulators rewound for the next episode
+    assert float(state.returns["agent_0"]) == 0.0
+    assert int(state.length) == 0
+
+
+def test_episode_stats_over_auto_reset():
+    """Composed outside AutoReset, stats publish at the fused boundary."""
+    env = EpisodeStats(AutoReset(MatrixGame(horizon=3)))
+    state, _ = env.reset(jax.random.key(0))
+    acts = _zeros_actions(env)
+    per_step = float(MatrixGame().payoff[0, 0])
+    for _ in range(3):  # third step is the fused boundary
+        state, ts = env.step(state, acts)
+    assert int(ts.step_type) == StepType.FIRST
+    assert float(state.last_returns["agent_0"]) == 3 * per_step
+    assert int(state.last_length) == 3
+    # second episode accumulates from zero
+    state, ts = env.step(state, acts)
+    assert float(state.returns["agent_0"]) == per_step
+    assert int(state.length) == 1
+
+
+# ----------------------------------------- runners on the wrapped new envs
+
+
+def test_train_anakin_runs_fused_on_new_envs():
+    """Both new envs step inside the fused Anakin scan and report episode
+    stats through the wrapper stack (no per-step host round trip)."""
+    from repro.core.system import train_anakin
+    from repro.systems import make_pair
+
+    kwargs = {
+        "robot_warehouse": {"horizon": 8, "grid_size": 6, "num_shelves": 4},
+        "lbf": {"horizon": 8, "grid_size": 6, "num_food": 2},
+    }
+    for env_name in ("robot_warehouse", "lbf"):
+        _, system = make_pair(
+            "ippo", env_name, rollout_len=8, epochs=1, num_minibatches=1,
+            env_kwargs=kwargs[env_name],
+        )
+        st, metrics = train_anakin(system, jax.random.key(0), 24, num_envs=4)
+        assert int(st.train.steps) >= 1, env_name
+        for k in ("reward", "done_frac", "episode_return"):
+            assert np.isfinite(np.asarray(metrics[k])).all(), (env_name, k)
+        # episodes end within the horizon, so boundaries must have fired
+        done = np.asarray(metrics["done_frac"])
+        assert done.sum() >= 2.0, env_name
+        if env_name == "robot_warehouse":
+            # rware ends on the horizon only: boundaries arrive in lockstep
+            assert (done[7::8] == 1.0).all()
+            assert (np.delete(done, np.s_[7::8]) == 0.0).all()
+
+
+def test_run_environment_loop_on_new_env():
+    from repro.core.system import run_environment_loop
+    from repro.systems import make_pair
+
+    _, system = make_pair(
+        "madqn", "lbf",
+        buffer_capacity=64, min_replay=8, batch_size=4,
+        env_kwargs={"horizon": 6, "grid_size": 5, "num_food": 2},
+    )
+    _, _, ev = run_environment_loop(system, jax.random.key(0), num_episodes=3)
+    assert ev.episode_return.shape == (3,)
+    assert (ev.episode_length >= 1).all() and (ev.episode_length <= 6).all()
