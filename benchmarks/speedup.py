@@ -1,10 +1,12 @@
 """JAX-rewrite speedup claim (10-100x): env-steps/sec across execution modes.
 
-Three rungs of the same MADQN system on the same environment:
+Rungs of the same MADQN system on the same environment:
   acme-style   — the paper's Block-1 python loop (one env step + one update
                  per python iteration; jitted fns, python-paced control flow)
   anakin-jit   — whole loop fused into one lax.scan under jit, 1 env
   anakin-vmap  — fused + vmap over N parallel envs
+  seed-vmap    — N independent seeds as one vmapped jit program vs N serial
+                 calls of the compiled per-seed program (repro.bench)
 
 Reported: environment steps per second and speedup over the python loop.
 """
@@ -15,6 +17,7 @@ import time
 import jax
 import numpy as np
 
+from repro.bench.throughput import measure_seed_vectorization
 from repro.core.system import run_environment_loop, train_anakin
 from repro.envs import Spread
 from repro.eval import make_evaluator
@@ -93,5 +96,16 @@ def bench(fast: bool = False):
     rows.append(
         (f"speedup/fused_eval_{n_eval_envs}env", dt / eval_steps * 1e6,
          f"{sps_eval:.0f} steps/s = {sps_eval / sps_eval_loop:.1f}x python eval loop")
+    )
+
+    # --- vmap over seeds (repro.bench): N runs as one fused jit program
+    n_seeds = 4 if fast else 8
+    sv_iters = 64 if fast else 512
+    sv = measure_seed_vectorization(system, n_seeds, sv_iters, 16)
+    rows.append(
+        (f"speedup/seed_vmap_{n_seeds}seeds",
+         1e6 / sv["vmapped_steps_per_sec"],
+         f"{sv['vmapped_steps_per_sec']:.0f} steps/s = "
+         f"{sv['speedup']:.1f}x serial per-seed training")
     )
     return rows

@@ -1,0 +1,46 @@
+#!/usr/bin/env python
+"""Validate benchmark artifacts against their documented schemas.
+
+    python scripts/check_bench_schema.py BENCH_eval.json BENCH_speed.json
+
+Exits non-zero (listing every problem) when an artifact has drifted from
+the schema documented in README.md — the CI tripwire that keeps
+BENCH_eval.json / BENCH_speed.json append-only contracts rather than
+silently mutating shapes.
+
+Thin CLI over `repro.bench.schema`, loaded straight from its file so this
+runs in dependency-less environments (the lint job has no jax; importing
+the `repro.bench` package would pull it in).
+"""
+import importlib.util
+import pathlib
+import sys
+
+_SCHEMA_PY = (
+    pathlib.Path(__file__).resolve().parent.parent
+    / "src" / "repro" / "bench" / "schema.py"
+)
+_spec = importlib.util.spec_from_file_location("repro_bench_schema", _SCHEMA_PY)
+_schema = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(_schema)
+
+
+def main(paths):
+    if not paths:
+        print("usage: check_bench_schema.py ARTIFACT.json [ARTIFACT.json ...]")
+        return 2
+    failed = False
+    for path in paths:
+        errs = _schema.validate_path(path)
+        if errs:
+            failed = True
+            print(f"{path}: {len(errs)} schema problem(s)")
+            for e in errs:
+                print(f"  - {e}")
+        else:
+            print(f"{path}: schema OK")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

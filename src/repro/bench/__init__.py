@@ -1,0 +1,38 @@
+"""repro.bench: the throughput half of the measurement backbone.
+
+`repro.eval` answers "how well does it play"; this package answers "how
+fast does it train" — steps/sec for each runner rung (python loop, fused
+Anakin, shard_map) and the serial-vs-vmapped-seed speedup, emitted as the
+``BENCH_speed.json`` perf-trajectory artifact by `repro.launch.bench_marl`.
+"""
+from repro.bench.schema import (
+    check_eval_schema,
+    check_speed_schema,
+    validate_path,
+)
+from repro.bench.throughput import (
+    SMOKE_OVERRIDES,
+    bench_cell,
+    measure_anakin,
+    measure_python_loop,
+    measure_seed_vectorization,
+    measure_shard_map,
+    run_bench,
+    smoke_overrides,
+    to_markdown,
+)
+
+__all__ = [
+    "SMOKE_OVERRIDES",
+    "bench_cell",
+    "smoke_overrides",
+    "check_eval_schema",
+    "check_speed_schema",
+    "measure_anakin",
+    "measure_python_loop",
+    "measure_seed_vectorization",
+    "measure_shard_map",
+    "run_bench",
+    "to_markdown",
+    "validate_path",
+]

@@ -1,0 +1,124 @@
+"""Benchmark-artifact schema checks (BENCH_eval.json / BENCH_speed.json).
+
+The two artifacts are the repo's measurement contract: every speed/scale PR
+appends to them, and downstream tooling (CI assertions, plots, the README
+tables) reads them by key. These checks pin the documented schema so a PR
+that silently drops or renames a field fails CI instead of corrupting the
+trajectory. Hand-rolled (no jsonschema dependency): each checker returns a
+list of human-readable problems, empty when the document conforms.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List
+
+_AGGREGATE_KEYS = (
+    "mean", "median", "iqm", "std", "num_seeds", "num_episodes",
+    "iqm_ci95", "mean_ci95",
+)
+_RUNNER_KEYS = ("python_loop", "anakin", "shard_map")
+_SEEDVEC_KEYS = (
+    "num_seeds", "serial_steps_per_sec", "vmapped_steps_per_sec", "speedup",
+)
+
+
+def _num(x) -> bool:
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def check_eval_schema(doc: Dict) -> List[str]:
+    """Problems with a BENCH_eval.json document (schema in README.md)."""
+    errs: List[str] = []
+    for k in ("seeds", "num_episodes", "num_envs", "train_iterations", "systems"):
+        if k not in doc:
+            errs.append(f"missing top-level key {k!r}")
+    if errs:
+        return errs
+    num_seeds, num_episodes = len(doc["seeds"]), doc["num_episodes"]
+    if not isinstance(doc["systems"], dict) or not doc["systems"]:
+        return ["'systems' must be a non-empty object"]
+    for sys_name, entry in doc["systems"].items():
+        envs = entry.get("envs")
+        if not isinstance(envs, dict) or not envs:
+            errs.append(f"systems.{sys_name}.envs must be a non-empty object")
+            continue
+        for env_name, cell in envs.items():
+            where = f"systems.{sys_name}.envs.{env_name}"
+            if not isinstance(cell.get("compatible"), bool):
+                errs.append(f"{where}.compatible must be a bool")
+                continue
+            if not cell["compatible"]:
+                if not isinstance(cell.get("reason"), str):
+                    errs.append(f"{where}: incompatible cell needs a 'reason'")
+                continue
+            returns = cell.get("returns")
+            if (
+                not isinstance(returns, list)
+                or len(returns) != num_seeds
+                or any(len(row) != num_episodes for row in returns)
+            ):
+                errs.append(
+                    f"{where}.returns must be a "
+                    f"({num_seeds}, {num_episodes}) nested list"
+                )
+            agg = cell.get("aggregates", {})
+            for k in _AGGREGATE_KEYS:
+                if k not in agg:
+                    errs.append(f"{where}.aggregates missing {k!r}")
+            if not isinstance(cell.get("per_agent_mean"), dict):
+                errs.append(f"{where}.per_agent_mean must be an object")
+            for k in ("mean_episode_length", "steps_per_sec", "horizon"):
+                if not _num(cell.get(k)):
+                    errs.append(f"{where}.{k} must be a number")
+    return errs
+
+
+def check_speed_schema(doc: Dict) -> List[str]:
+    """Problems with a BENCH_speed.json document (schema in README.md)."""
+    errs: List[str] = []
+    cfg = doc.get("config")
+    if not isinstance(cfg, dict):
+        errs.append("missing top-level 'config' object")
+    else:
+        for k in ("iterations", "num_envs", "num_seeds", "loop_episodes"):
+            if not _num(cfg.get(k)):
+                errs.append(f"config.{k} must be a number")
+    cells = doc.get("cells")
+    if not isinstance(cells, list) or not cells:
+        errs.append("'cells' must be a non-empty list")
+        return errs
+    for i, cell in enumerate(cells):
+        where = f"cells[{i}]"
+        for k in ("system", "env"):
+            if not isinstance(cell.get(k), str):
+                errs.append(f"{where}.{k} must be a string")
+        if not isinstance(cell.get("compatible"), bool):
+            errs.append(f"{where}.compatible must be a bool")
+            continue
+        if not cell["compatible"]:
+            if not isinstance(cell.get("reason"), str):
+                errs.append(f"{where}: incompatible cell needs a 'reason'")
+            continue
+        runners = cell.get("runners", {})
+        for r in _RUNNER_KEYS:
+            sps = runners.get(r, {}).get("steps_per_sec")
+            if not _num(sps) or sps <= 0:
+                errs.append(f"{where}.runners.{r}.steps_per_sec must be > 0")
+        sv = cell.get("seed_vectorization", {})
+        for k in _SEEDVEC_KEYS:
+            if not _num(sv.get(k)):
+                errs.append(f"{where}.seed_vectorization.{k} must be a number")
+        if _num(sv.get("speedup")) and sv["speedup"] <= 0:
+            errs.append(f"{where}.seed_vectorization.speedup must be > 0")
+    return errs
+
+
+def validate_path(path: str) -> List[str]:
+    """Validate one artifact file, dispatching on its contents."""
+    with open(path) as f:
+        doc = json.load(f)
+    if "cells" in doc:
+        return check_speed_schema(doc)
+    if "systems" in doc:
+        return check_eval_schema(doc)
+    return [f"{path}: neither a BENCH_eval (systems) nor BENCH_speed (cells) document"]

@@ -1,0 +1,297 @@
+"""Training-throughput measurement across the three runner rungs.
+
+Each (system, env) cell reports environment steps per second for
+
+  * ``python_loop`` — the paper's Block-1 Acme-style loop (jitted fns,
+    python-paced control flow; warmed first, so the number is steady-state
+    dispatch overhead rather than first-call compilation);
+  * ``anakin``      — the fused scan(iterations) x vmap(envs) jit, timed on
+    the second call of one reusable compiled program;
+  * ``shard_map``   — the same program shard_mapped over the mesh data axis
+    (every local device runs its own envs + buffer shard);
+
+plus the PR's headline column: ``seed_vectorization`` — N independent seeds
+trained serially (one compiled per-seed program called N times) vs the same
+N seeds as a single vmapped jit program (`train_anakin(..., num_seeds=N)`),
+with identical per-seed keys so both sides do bitwise-identical work.
+
+All fused timings exclude compilation (warm call first); steps/sec counts
+*environment* steps summed over envs, devices and seeds.
+"""
+from __future__ import annotations
+
+import pathlib
+import time
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.system import (
+    make_anakin,
+    make_distributed,
+    run_environment_loop,
+)
+from repro.launch.mesh import make_auto_mesh
+from repro.systems.offpolicy import OffPolicyConfig
+from repro.systems.onpolicy import PPOConfig
+from repro.systems.registry import REGISTRY, compatibility, make_pair
+
+# The CPU smoke operating point: small enough that per-op overhead (the
+# thing vmap-over-seeds amortises) is visible next to real compute, and the
+# whole default slice benches in ~a minute.  Keyed by config class so every
+# member of a family gets the same treatment; recorded per cell in the
+# artifact so rows are comparable across PRs.  Pass explicit overrides (or
+# ``{}``) to bench registry-default configs instead.
+SMOKE_OVERRIDES = {
+    OffPolicyConfig: dict(hidden_sizes=(32, 32), batch_size=32, buffer_capacity=5_000),
+    PPOConfig: dict(hidden_sizes=(32, 32), rollout_len=32, epochs=1, num_minibatches=2),
+}
+
+_REPEATS = 3  # timed repetitions; best-of is reported (noise floor, not mean)
+
+
+def smoke_overrides(system_name: str) -> dict:
+    """The smoke-scale config overrides for a registered system (may be {})."""
+    return dict(SMOKE_OVERRIDES.get(REGISTRY[system_name].config_cls, {}))
+
+
+def _timed_warm(program, *args, repeats: int = _REPEATS) -> float:
+    """Best-of-``repeats`` seconds for jit-cached calls of ``program``.
+
+    The first (compiling) call is discarded; best-of suppresses scheduler
+    noise, which on small CPU boxes easily exceeds the effects we measure.
+    """
+    jax.block_until_ready(program(*args))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(program(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def measure_python_loop(system, num_episodes: int = 3, seed: int = 0) -> Dict:
+    """Steps/sec of the faithful Block-1 python loop.
+
+    A one-episode warm-up call populates the jit caches first, so the timed
+    number reflects the loop's steady state — python-paced dispatch of the
+    jitted pieces — not first-call compilation.
+    """
+    run_environment_loop(system, jax.random.key(seed), num_episodes=1)
+    t0 = time.perf_counter()
+    _, _, ev = run_environment_loop(
+        system, jax.random.key(seed), num_episodes=num_episodes
+    )
+    dt = time.perf_counter() - t0
+    steps = int(np.sum(np.asarray(ev.episode_length)))
+    return {"steps_per_sec": steps / dt, "env_steps": steps, "wall_seconds": dt}
+
+
+def measure_anakin(system, iterations: int, num_envs: int, seed: int = 0) -> Dict:
+    """Steps/sec of the fused Anakin jit (steady state, compile excluded)."""
+    program = make_anakin(system, iterations, num_envs)
+    dt = _timed_warm(program, jax.random.key(seed))
+    steps = iterations * num_envs
+    return {"steps_per_sec": steps / dt, "env_steps": steps, "wall_seconds": dt}
+
+
+def measure_shard_map(
+    system, iterations: int, num_envs_per_device: int, mesh=None, seed: int = 0
+) -> Dict:
+    """Steps/sec of the shard_map runner over every local device.
+
+    ``system`` should be built with ``distributed_axis="data"`` so gradients
+    pmean over the mesh (a no-op at one device, required beyond it).
+    """
+    if mesh is None:
+        mesh = make_auto_mesh((jax.local_device_count(),), ("data",))
+    n_dev = mesh.shape["data"]
+    program = make_distributed(system, iterations, num_envs_per_device, mesh)
+    dt = _timed_warm(program, jax.random.key(seed))
+    steps = iterations * num_envs_per_device * n_dev
+    return {
+        "steps_per_sec": steps / dt,
+        "env_steps": steps,
+        "wall_seconds": dt,
+        "num_devices": int(n_dev),
+    }
+
+
+def measure_seed_vectorization(
+    system, num_seeds: int, iterations: int, num_envs: int
+) -> Dict:
+    """Serial-vs-vmapped multi-seed training speedup (the headline column).
+
+    Both sides run the same per-seed keys (``jax.random.key(0..N-1)``) for
+    the same iteration budget; the serial side reuses one compiled per-seed
+    program (compile excluded from both timings), so the ratio isolates the
+    vmap-over-seeds fusion win rather than retracing overhead.
+    """
+    keys = [jax.random.key(s) for s in range(num_seeds)]
+    serial_program = make_anakin(system, iterations, num_envs)
+
+    def serial_sweep(ks):
+        for k in ks:
+            jax.block_until_ready(serial_program(k))
+        return ()
+
+    serial_dt = _timed_warm(serial_sweep, keys)
+    vmapped_program = make_anakin(
+        system, iterations, num_envs, num_seeds=num_seeds
+    )
+    vmapped_dt = _timed_warm(vmapped_program, jnp.stack(keys))
+
+    steps = num_seeds * iterations * num_envs
+    return {
+        "num_seeds": num_seeds,
+        "serial_steps_per_sec": steps / serial_dt,
+        "vmapped_steps_per_sec": steps / vmapped_dt,
+        "speedup": serial_dt / vmapped_dt,
+    }
+
+
+def bench_cell(
+    system_name: str,
+    env_name: str,
+    iterations: int,
+    num_envs: int,
+    num_seeds: int,
+    loop_episodes: int,
+    system_overrides: Optional[dict] = None,
+) -> Dict:
+    """One BENCH_speed cell: every runner rung + the seed-vectorization row."""
+    reason = compatibility(system_name, env_name)
+    if reason is not None:
+        return {
+            "system": system_name,
+            "env": env_name,
+            "compatible": False,
+            "reason": reason,
+        }
+    overrides = (
+        smoke_overrides(system_name) if system_overrides is None
+        else dict(system_overrides)
+    )
+    env, system = make_pair(system_name, env_name, **overrides)
+    _, dist_system = make_pair(
+        system_name, env_name, distributed_axis="data", **overrides
+    )
+    loop = measure_python_loop(system, loop_episodes)
+    anakin = measure_anakin(system, iterations, num_envs)
+    sharded = measure_shard_map(dist_system, iterations, num_envs)
+    anakin["speedup_vs_loop"] = anakin["steps_per_sec"] / loop["steps_per_sec"]
+    sharded["speedup_vs_loop"] = sharded["steps_per_sec"] / loop["steps_per_sec"]
+    return {
+        "system": system_name,
+        "env": env_name,
+        "compatible": True,
+        "horizon": int(env.horizon),
+        "config_overrides": {k: list(v) if isinstance(v, tuple) else v
+                             for k, v in overrides.items()},
+        "runners": {
+            "python_loop": loop,
+            "anakin": anakin,
+            "shard_map": sharded,
+        },
+        "seed_vectorization": measure_seed_vectorization(
+            system, num_seeds, iterations, num_envs
+        ),
+    }
+
+
+def run_bench(
+    system_names: Sequence[str],
+    env_names: Sequence[str],
+    iterations: int = 256,
+    num_envs: int = 4,
+    num_seeds: int = 8,
+    loop_episodes: int = 3,
+    out_path: str = "BENCH_speed.json",
+    system_overrides: Optional[dict] = None,
+) -> Dict:
+    """Sweep systems x envs for throughput; write BENCH_speed.json + .md.
+
+    Systems run at the `SMOKE_OVERRIDES` operating point unless
+    ``system_overrides`` maps their name to an explicit config dict.  The
+    schema (documented in README.md) is validated in CI by
+    ``scripts/check_bench_schema.py``; append rows here for future speed
+    PRs instead of inventing ad-hoc metrics.
+    """
+    import json
+
+    overrides = system_overrides or {}
+    results: Dict = {
+        "config": {
+            "iterations": iterations,
+            "num_envs": num_envs,
+            "num_seeds": num_seeds,
+            "loop_episodes": loop_episodes,
+            "backend": jax.default_backend(),
+            "num_devices": jax.local_device_count(),
+        },
+        "cells": [],
+    }
+    for sys_name in system_names:
+        for env_name in env_names:
+            t0 = time.perf_counter()
+            cell = bench_cell(
+                sys_name, env_name, iterations, num_envs, num_seeds,
+                loop_episodes, system_overrides=overrides.get(sys_name),
+            )
+            results["cells"].append(cell)
+            if not cell["compatible"]:
+                print(f"{sys_name:>10s} x {env_name:<18s}: skipped ({cell['reason']})")
+                continue
+            sv = cell["seed_vectorization"]
+            print(
+                f"{sys_name:>10s} x {env_name:<18s}: "
+                f"loop={cell['runners']['python_loop']['steps_per_sec']:,.0f} "
+                f"anakin={cell['runners']['anakin']['steps_per_sec']:,.0f} "
+                f"shard_map={cell['runners']['shard_map']['steps_per_sec']:,.0f} steps/s  "
+                f"{sv['num_seeds']}-seed vmap speedup={sv['speedup']:.1f}x  "
+                f"({time.perf_counter() - t0:.1f}s)"
+            )
+
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    md_path = str(pathlib.Path(out_path).with_suffix(".md"))
+    with open(md_path, "w") as f:
+        f.write(to_markdown(results))
+    print(f"wrote {out_path} and {md_path}")
+    return results
+
+
+def to_markdown(results: Dict) -> str:
+    """Render the throughput sweep as one row per runnable cell."""
+    cfg = results["config"]
+    lines = [
+        "# Training throughput — runners x seed vectorization",
+        "",
+        f"{cfg['iterations']} iterations x {cfg['num_envs']} envs per run, "
+        f"{cfg['num_seeds']} seeds, backend={cfg['backend']} "
+        f"({cfg['num_devices']} device(s)). Steps/sec counts environment "
+        "steps over all envs/devices/seeds; `vmap speedup` is serial "
+        "per-seed training vs one vmapped multi-seed jit.",
+        "",
+        "| system | env | python loop (steps/s) | anakin (steps/s) | "
+        "shard_map (steps/s) | vmap speedup |",
+        "|---|---|---|---|---|---|",
+    ]
+    for cell in results["cells"]:
+        if not cell.get("compatible"):
+            lines.append(
+                f"| {cell['system']} | {cell['env']} | -- | -- | -- | -- |"
+            )
+            continue
+        r, sv = cell["runners"], cell["seed_vectorization"]
+        lines.append(
+            f"| {cell['system']} | {cell['env']} "
+            f"| {r['python_loop']['steps_per_sec']:,.0f} "
+            f"| {r['anakin']['steps_per_sec']:,.0f} "
+            f"({r['anakin']['speedup_vs_loop']:.0f}x) "
+            f"| {r['shard_map']['steps_per_sec']:,.0f} "
+            f"| {sv['speedup']:.1f}x @ {sv['num_seeds']} seeds |"
+        )
+    return "\n".join(lines) + "\n"

@@ -129,12 +129,29 @@ def evaluate(
     key,
     num_episodes: int = 32,
     num_envs: int = 16,
+    num_seeds: int | None = None,
 ) -> EvalMetrics:
     """Standalone jit-compiled greedy evaluation.
 
     `params` may be a full TrainState or bare network params. Same
     (params, key) always produces bitwise-identical returns, and matches
     the interleaved evaluator built with the same (num_episodes, num_envs).
+
+    With ``num_seeds`` set, ``params`` and ``key`` must both carry a leading
+    ``(num_seeds,)`` axis (e.g. the train states out of seed-vectorized
+    `train_anakin` plus stacked per-seed keys): all seeds evaluate in one
+    vmapped jit program and every `EvalMetrics` leaf gains that axis.
     """
     eval_fn = make_evaluator(system, num_episodes, num_envs)
+    if num_seeds is not None:
+        def lane(x):
+            return jnp.shape(x)[0] if jnp.ndim(x) else None  # None: unbatched
+        lanes = {lane(leaf) for leaf in jax.tree_util.tree_leaves(params)}
+        lanes.add(lane(key))
+        if lanes != {num_seeds}:
+            raise ValueError(
+                f"num_seeds={num_seeds} but params/key carry leading axes "
+                f"{sorted(lanes, key=str)}"
+            )
+        eval_fn = jax.vmap(eval_fn)
     return jax.jit(eval_fn)(params, key)

@@ -18,10 +18,12 @@ from __future__ import annotations
 
 import json
 import math
+import pathlib
 import time
 from typing import Dict, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.system import train_anakin
@@ -40,42 +42,52 @@ def evaluate_on_env(
     train_iterations: int = 0,
     train_num_envs: int = 8,
 ) -> Dict[str, object]:
-    """Evaluate one system on its env over `seeds`; returns the JSON cell."""
-    eval_fn = jax.jit(make_evaluator(system, num_episodes, num_envs))
+    """Evaluate one system on its env over `seeds`; returns the JSON cell.
+
+    All seeds run vectorized: training is one seed-vmapped `train_anakin`
+    program and evaluation one vmapped evaluator call, so the whole cell
+    compiles exactly twice (once each) instead of once per seed.  Per-seed
+    keys are threaded as a stacked traced key batch — seed ``s`` sees
+    exactly the ``jax.random.key(s)`` stream the serial loop used, so the
+    per-seed returns are unchanged.
+    """
+    num_seeds = len(seeds)
+    eval_fn = jax.jit(jax.vmap(make_evaluator(system, num_episodes, num_envs)))
     horizon = int(system.env.horizon)
     eff_envs = min(num_envs, num_episodes)
     steps_per_call = math.ceil(num_episodes / eff_envs) * eff_envs * horizon
 
-    team_scores, agent_scores, lengths, sps = [], {}, [], []
-    for seed in seeds:
-        key = jax.random.key(seed)
-        k_train, k_eval = jax.random.split(key)
-        if train_iterations > 0:
-            st, _ = train_anakin(system, k_train, train_iterations, train_num_envs)
-            train = st.train
-        else:
-            train = system.init_train(k_train)
+    keys = jnp.stack([jax.random.key(int(s)) for s in seeds])
+    split = jax.vmap(jax.random.split)(keys)  # (num_seeds, 2)
+    k_train, k_eval = split[:, 0], split[:, 1]
+    if train_iterations > 0:
+        st, _ = train_anakin(
+            system, k_train, train_iterations, train_num_envs,
+            num_seeds=num_seeds,
+        )
+        train = st.train
+    else:
+        train = jax.vmap(system.init_train)(k_train)
 
-        metrics = jax.block_until_ready(eval_fn(train, k_eval))  # warm compile
+    metrics = jax.block_until_ready(eval_fn(train, k_eval))  # warm compile
+    best = float("inf")
+    for _ in range(3):  # best-of-3: scheduler noise swamps ms-scale eval calls
         t0 = time.perf_counter()
         metrics = jax.block_until_ready(eval_fn(train, k_eval))
-        sps.append(steps_per_call / (time.perf_counter() - t0))
+        best = min(best, time.perf_counter() - t0)
+    sps = num_seeds * steps_per_call / best
 
-        team_scores.append(np.asarray(metrics.episode_return))
-        lengths.append(np.asarray(metrics.episode_length))
-        for a, r in metrics.agent_returns.items():
-            agent_scores.setdefault(a, []).append(np.asarray(r))
-
-    team = np.stack(team_scores)  # (num_seeds, num_episodes)
+    team = np.asarray(metrics.episode_return)  # (num_seeds, num_episodes)
     return {
         "compatible": True,
         "returns": team.tolist(),
         "aggregates": aggregate(team),
         "per_agent_mean": {
-            a: float(np.mean(np.stack(rs))) for a, rs in agent_scores.items()
+            a: float(np.mean(np.asarray(r)))
+            for a, r in metrics.agent_returns.items()
         },
-        "mean_episode_length": float(np.mean(np.stack(lengths))),
-        "steps_per_sec": float(np.median(sps)),
+        "mean_episode_length": float(np.mean(np.asarray(metrics.episode_length))),
+        "steps_per_sec": float(sps),
         "horizon": horizon,
     }
 
@@ -135,7 +147,7 @@ def run_sweep(
 
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2)
-    md_path = out_path.rsplit(".", 1)[0] + ".md"
+    md_path = str(pathlib.Path(out_path).with_suffix(".md"))
     with open(md_path, "w") as f:
         f.write(to_markdown(results))
     print(f"wrote {out_path} and {md_path}")

@@ -1,0 +1,61 @@
+"""Training-throughput launcher — the speed half of the measurement backbone.
+
+Times every runner rung (python loop / fused Anakin / shard_map) and the
+serial-vs-vmapped-seed speedup for a systems x envs slice, and writes the
+``BENCH_speed.json`` + ``BENCH_speed.md`` perf-trajectory artifact (schema
+in README.md, validated by ``scripts/check_bench_schema.py``).
+
+  # the default slice (vdn + ippo on matrix_game + spread)
+  PYTHONPATH=src python -m repro.launch.bench_marl
+
+  # CI smoke scale
+  PYTHONPATH=src python -m repro.launch.bench_marl --systems vdn ippo \
+      --envs matrix_game --iterations 64 --num-envs 4 --num-seeds 4
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.bench.throughput import run_bench
+from repro.envs import REGISTRY as ENVS
+from repro.systems.registry import REGISTRY as SYSTEMS
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument(
+        "--systems", nargs="+", choices=sorted(SYSTEMS) + ["all"],
+        default=["vdn", "ippo"],
+        help="systems to bench (default: one replay + one on-policy family)",
+    )
+    p.add_argument(
+        "--envs", nargs="+", choices=sorted(ENVS) + ["all"],
+        default=["matrix_game", "spread"],
+        help="envs to bench (default: the cheapest classic pair)",
+    )
+    p.add_argument("--iterations", type=int, default=256,
+                   help="fused-runner training iterations per timed call")
+    p.add_argument("--num-envs", type=int, default=4,
+                   help="vmapped envs per run (and per device for shard_map)")
+    p.add_argument("--num-seeds", type=int, default=8,
+                   help="seeds for the serial-vs-vmapped comparison")
+    p.add_argument("--loop-episodes", type=int, default=3,
+                   help="episodes for the python-loop baseline timing")
+    p.add_argument("--out", default="BENCH_speed.json")
+    args = p.parse_args()
+
+    system_names = sorted(SYSTEMS) if "all" in args.systems else args.systems
+    env_names = sorted(ENVS) if "all" in args.envs else args.envs
+    run_bench(
+        system_names=system_names,
+        env_names=env_names,
+        iterations=args.iterations,
+        num_envs=args.num_envs,
+        num_seeds=args.num_seeds,
+        loop_episodes=args.loop_episodes,
+        out_path=args.out,
+    )
+
+
+if __name__ == "__main__":
+    main()

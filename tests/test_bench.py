@@ -1,0 +1,195 @@
+"""Seed-vectorized training parity + the BENCH_speed throughput subsystem."""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.bench.schema import check_eval_schema, check_speed_schema
+from repro.bench.throughput import measure_seed_vectorization, to_markdown
+from repro.core.system import seed_keys, train_anakin
+from repro.envs import MatrixGame
+from repro.eval import evaluate
+from repro.eval.sweep import evaluate_on_env
+from repro.systems.offpolicy import OffPolicyConfig
+from repro.systems.onpolicy import PPOConfig, make_ippo
+from repro.systems.vdn import make_vdn
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+CFG = OffPolicyConfig(buffer_capacity=500, min_replay=50, batch_size=16)
+
+
+def _vdn():
+    return make_vdn(MatrixGame(horizon=10), CFG)
+
+
+def _ippo():
+    return make_ippo(
+        MatrixGame(horizon=10), PPOConfig(rollout_len=8, epochs=2, num_minibatches=2)
+    )
+
+
+def _lane(tree, i):
+    return jax.tree_util.tree_map(lambda x: x[i], tree)
+
+
+# ----------------------------------------------------- seed vectorization
+
+
+def test_seed_keys_split_and_stacked():
+    ks = seed_keys(jax.random.key(0), 3)
+    assert ks.shape == (3,)
+    stacked = jnp.stack([jax.random.key(s) for s in (5, 9)])
+    out = seed_keys(stacked, 2)
+    np.testing.assert_array_equal(
+        jax.random.key_data(out), jax.random.key_data(stacked)
+    )
+    with pytest.raises(ValueError):
+        seed_keys(stacked, 3)
+
+
+@pytest.mark.parametrize("make", [_vdn, _ippo], ids=["replay", "rollout"])
+def test_vmapped_seeds_bitwise_match_serial(make):
+    """vmap-over-seeds training == N stacked serial runs, per-seed bitwise.
+
+    Covers both experience regimes; for the rollout system this also pins
+    the hoisted update gate to the serial cadence (train.steps must agree —
+    under a naive per-lane cond-as-select the update count would differ).
+    """
+    system = make()
+    seeds = [0, 1, 2, 3]
+    serial = [train_anakin(system, jax.random.key(s), 60, num_envs=4) for s in seeds]
+    keys = jnp.stack([jax.random.key(s) for s in seeds])
+    stv, mv = train_anakin(system, keys, 60, num_envs=4, num_seeds=4)
+    assert mv["reward"].shape == (4, 60)
+    for i in range(4):
+        st_i, m_i = serial[i]
+        np.testing.assert_array_equal(
+            np.asarray(m_i["reward"]), np.asarray(mv["reward"])[i]
+        )
+        assert int(st_i.train.steps) == int(_lane(stv.train, i).steps)
+        for a, b in zip(
+            jax.tree_util.tree_leaves(st_i.train.params),
+            jax.tree_util.tree_leaves(_lane(stv.train.params, i)),
+        ):
+            # params may drift a final ulp from XLA kernel-choice noise
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=0, atol=1e-6
+            )
+
+
+def test_vmapped_interleaved_eval_matches_serial():
+    """Eval points inside the seed-batched jit reproduce serial lanes."""
+    system = _vdn()
+    ks = seed_keys(jax.random.key(3), 2)
+    stv, mv, evv = train_anakin(
+        system, ks, 40, num_envs=4,
+        eval_every=20, eval_episodes=8, eval_num_envs=4, num_seeds=2,
+    )
+    assert mv["reward"].shape == (2, 40)
+    assert evv.episode_return.shape == (2, 2, 8)  # (seeds, eval points, eps)
+    for i in range(2):
+        _, m_i, ev_i = train_anakin(
+            system, ks[i], 40, num_envs=4,
+            eval_every=20, eval_episodes=8, eval_num_envs=4,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(ev_i.episode_return), np.asarray(evv.episode_return)[i]
+        )
+        np.testing.assert_array_equal(
+            np.asarray(m_i["reward"]), np.asarray(mv["reward"])[i]
+        )
+
+
+def test_evaluate_with_seed_axis_matches_standalone():
+    system = _vdn()
+    keys = jnp.stack([jax.random.key(s) for s in (0, 1)])
+    trains = jax.vmap(system.init_train)(keys)
+    batched = evaluate(
+        system, trains, keys, num_episodes=6, num_envs=3, num_seeds=2
+    )
+    assert batched.episode_return.shape == (2, 6)
+    for i in range(2):
+        single = evaluate(
+            system, _lane(trains, i), keys[i], num_episodes=6, num_envs=3
+        )
+        np.testing.assert_array_equal(
+            np.asarray(single.episode_return),
+            np.asarray(batched.episode_return)[i],
+        )
+
+
+def test_evaluate_num_seeds_must_match_batch():
+    system = _vdn()
+    keys = jnp.stack([jax.random.key(s) for s in (0, 1)])
+    trains = jax.vmap(system.init_train)(keys)
+    with pytest.raises(ValueError, match="num_seeds"):
+        evaluate(system, trains, keys, num_episodes=4, num_envs=2, num_seeds=3)
+
+
+def test_sweep_cell_matches_serial_per_seed_path():
+    """The vectorized sweep cell reproduces the pre-vmap serial loop exactly
+    (train per seed, then standalone eval with the same key derivation)."""
+    system = _vdn()
+    seeds = (0, 1)
+    cell = evaluate_on_env(
+        system, seeds, num_episodes=6, num_envs=3,
+        train_iterations=40, train_num_envs=4,
+    )
+    assert cell["compatible"] and len(cell["returns"]) == len(seeds)
+    for i, seed in enumerate(seeds):
+        k_train, k_eval = jax.random.split(jax.random.key(seed))
+        st, _ = train_anakin(system, k_train, 40, num_envs=4)
+        ref = evaluate(system, st.train, k_eval, num_episodes=6, num_envs=3)
+        np.testing.assert_array_equal(
+            np.asarray(ref.episode_return), np.asarray(cell["returns"][i])
+        )
+
+
+# ------------------------------------------------------------- throughput
+
+
+def test_measure_seed_vectorization_smoke():
+    out = measure_seed_vectorization(_vdn(), num_seeds=2, iterations=8, num_envs=2)
+    assert out["num_seeds"] == 2
+    for k in ("serial_steps_per_sec", "vmapped_steps_per_sec", "speedup"):
+        assert out[k] > 0
+
+
+# ------------------------------------------------------- artifact schemas
+
+
+def test_checked_in_artifacts_conform_to_schema():
+    """The committed BENCH_* artifacts must match their documented schemas."""
+    with open(REPO / "BENCH_eval.json") as f:
+        assert check_eval_schema(json.load(f)) == []
+    with open(REPO / "BENCH_speed.json") as f:
+        assert check_speed_schema(json.load(f)) == []
+
+
+def test_speed_schema_catches_drift():
+    with open(REPO / "BENCH_speed.json") as f:
+        doc = json.load(f)
+    assert check_speed_schema(doc) == []
+    cell = next(c for c in doc["cells"] if c["compatible"])
+    del cell["runners"]["anakin"]["steps_per_sec"]
+    doc["config"].pop("num_seeds")
+    errs = check_speed_schema(doc)
+    assert any("anakin" in e for e in errs)
+    assert any("num_seeds" in e for e in errs)
+    assert to_markdown  # markdown renderer stays importable with the schema
+
+
+def test_eval_schema_catches_drift():
+    with open(REPO / "BENCH_eval.json") as f:
+        doc = json.load(f)
+    sys_name = next(iter(doc["systems"]))
+    envs = doc["systems"][sys_name]["envs"]
+    cell = next(c for c in envs.values() if c.get("compatible"))
+    cell["returns"] = cell["returns"][:-1] + [cell["returns"][-1][:-1]]
+    del cell["aggregates"]["iqm_ci95"]
+    errs = check_eval_schema(doc)
+    assert any("returns" in e for e in errs)
+    assert any("iqm_ci95" in e for e in errs)

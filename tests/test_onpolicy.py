@@ -1,5 +1,8 @@
 """IPPO/MAPPO behaviour tests (System-API ports of the flagship systems)."""
+import functools
+
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.system import train_anakin
@@ -25,11 +28,32 @@ def _per_update_rewards(system, key, num_updates, rollout_len, num_envs):
     return r.reshape(num_updates, rollout_len).mean(axis=-1)
 
 
+def _milestone_system():
+    return make_ippo(
+        MatrixGame(horizon=10),
+        PPOConfig(rollout_len=32, epochs=4, num_minibatches=2,
+                  entropy_coef=0.02, learning_rate=1e-3),
+    )
+
+
+@functools.lru_cache(maxsize=1)
+def _seed0_curve():
+    """The milestone run (seed 0, 150 updates), shared by the tests below."""
+    return _per_update_rewards(_milestone_system(), jax.random.key(0), 150, 32, 16)
+
+
+def _assert_seed_milestones(r):
+    late = r[-15:].mean()
+    improvement = late - r[:15].mean()
+    seed_improvement = SEED_IPPO_LAST15 - SEED_IPPO_FIRST15
+    # converged within 10% of the seed's final level...
+    assert abs(late - SEED_IPPO_LAST15) < 0.1 * abs(SEED_IPPO_LAST15), late
+    # ...with at least half the seed's early->late improvement
+    assert improvement > 0.5 * seed_improvement, (improvement, seed_improvement)
+
+
 def test_ippo_learns_matrix_game():
-    env = MatrixGame(horizon=10)
-    system = make_ippo(env, PPOConfig(rollout_len=32, epochs=4, num_minibatches=2,
-                                      entropy_coef=0.02, learning_rate=1e-3))
-    r = _per_update_rewards(system, jax.random.key(0), 150, 32, 16)
+    r = _seed0_curve()
     assert r[-15:].mean() > r[:15].mean() + 1.0, (r[:15].mean(), r[-15:].mean())
 
 
@@ -40,17 +64,24 @@ def test_ippo_parity_with_seed_curve():
     run: the port must hit the same milestones — clear early->late
     improvement and convergence to the safe equilibrium (payoff ~5).
     """
-    env = MatrixGame(horizon=10)
-    system = make_ippo(env, PPOConfig(rollout_len=32, epochs=4, num_minibatches=2,
-                                      entropy_coef=0.02, learning_rate=1e-3))
-    r = _per_update_rewards(system, jax.random.key(0), 150, 32, 16)
-    late = r[-15:].mean()
-    improvement = late - r[:15].mean()
-    seed_improvement = SEED_IPPO_LAST15 - SEED_IPPO_FIRST15
-    # converged within 10% of the seed's final level...
-    assert abs(late - SEED_IPPO_LAST15) < 0.1 * abs(SEED_IPPO_LAST15), late
-    # ...with at least half the seed's early->late improvement
-    assert improvement > 0.5 * seed_improvement, (improvement, seed_improvement)
+    _assert_seed_milestones(_seed0_curve())
+
+
+def test_vmapped_seed_training_hits_seed_milestones():
+    """Seed-vectorized training preserves the recorded IPPO milestones.
+
+    Training seeds (0, 123) as one vmapped jit program, the seed-0 lane
+    must be bitwise-identical to the serial seed-0 milestone run — the
+    sweep's multi-seed vectorization is a pure execution change, not a
+    semantic one.
+    """
+    keys = jnp.stack([jax.random.key(0), jax.random.key(123)])
+    _, metrics = train_anakin(
+        _milestone_system(), keys, 150 * 32, num_envs=16, num_seeds=2
+    )
+    lane0 = np.asarray(metrics["reward"])[0].reshape(150, 32).mean(axis=-1)
+    np.testing.assert_array_equal(lane0, _seed0_curve())
+    _assert_seed_milestones(lane0)
 
 
 def test_mappo_improves_speaker_listener():
