@@ -2,11 +2,15 @@
 """Validate benchmark artifacts against their documented schemas.
 
     python scripts/check_bench_schema.py BENCH_eval.json BENCH_speed.json
+    python scripts/check_bench_schema.py --full BENCH_eval.json ...
 
 Exits non-zero (listing every problem) when an artifact has drifted from
-the schema documented in README.md — the CI tripwire that keeps
+the schema documented in docs/BENCH.md — the CI tripwire that keeps
 BENCH_eval.json / BENCH_speed.json append-only contracts rather than
-silently mutating shapes.
+silently mutating shapes. ``--full`` additionally pins the checked-in
+artifacts' coverage: the eval matrix must span every registered system x
+env cell and the speed slice its three tracked families (use it for the
+committed artifacts; CI smoke slices validate without it).
 
 Thin CLI over `repro.bench.schema`, loaded straight from its file so this
 runs in dependency-less environments (the lint job has no jax; importing
@@ -26,12 +30,17 @@ _spec.loader.exec_module(_schema)
 
 
 def main(paths):
+    full = "--full" in paths
+    paths = [p for p in paths if p != "--full"]
     if not paths:
-        print("usage: check_bench_schema.py ARTIFACT.json [ARTIFACT.json ...]")
+        print(
+            "usage: check_bench_schema.py [--full] ARTIFACT.json "
+            "[ARTIFACT.json ...]"
+        )
         return 2
     failed = False
     for path in paths:
-        errs = _schema.validate_path(path)
+        errs = _schema.validate_path(path, full=full)
         if errs:
             failed = True
             print(f"{path}: {len(errs)} schema problem(s)")

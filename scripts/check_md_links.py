@@ -1,0 +1,72 @@
+#!/usr/bin/env python
+"""Check that markdown links in the given files resolve.
+
+    python scripts/check_md_links.py README.md docs/*.md
+
+Dependency-less (runs in the CI docs job with no installs): every
+relative link target must exist on disk, and every in-repo ``#anchor``
+must match a heading in the target file (GitHub's slug rules, minus the
+exotic cases). External ``http(s)``/``mailto`` links are recorded but not
+fetched — CI must not flake on the network.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# [text](target) — skips images' leading ! via the (?<!\!) guard is not
+# needed: image targets should resolve too, so match them as well
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+_CODE_FENCE = re.compile(r"```.*?```", re.S)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug for a heading (lowercase, spaces -> dashes)."""
+    text = re.sub(r"[`*_]", "", heading.strip().lower())
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: pathlib.Path) -> set:
+    """The set of heading anchors a markdown file exposes."""
+    text = _CODE_FENCE.sub("", path.read_text())
+    return {github_slug(h) for h in _HEADING.findall(text)}
+
+
+def check_file(path: pathlib.Path) -> list:
+    """All broken links in one markdown file (empty when clean)."""
+    problems = []
+    text = _CODE_FENCE.sub("", path.read_text())
+    for target in _LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        dest, _, anchor = target.partition("#")
+        dest_path = (path.parent / dest).resolve() if dest else path.resolve()
+        if not dest_path.exists():
+            problems.append(f"{path}: broken link -> {target}")
+            continue
+        if anchor and dest_path.suffix == ".md":
+            if github_slug(anchor) not in anchors_of(dest_path):
+                problems.append(f"{path}: missing anchor -> {target}")
+    return problems
+
+
+def main(paths) -> int:
+    """CLI entry point: exit non-zero when any link is broken."""
+    if not paths:
+        print("usage: check_md_links.py FILE.md [FILE.md ...]")
+        return 2
+    problems = []
+    for p in paths:
+        problems.extend(check_file(pathlib.Path(p)))
+    for prob in problems:
+        print(prob)
+    if not problems:
+        print(f"{len(paths)} file(s): all links resolve")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

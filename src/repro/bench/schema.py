@@ -21,13 +21,29 @@ _SEEDVEC_KEYS = (
     "num_seeds", "serial_steps_per_sec", "vmapped_steps_per_sec", "speedup",
 )
 
+# The coverage pins for the *checked-in* artifacts (smoke runs in CI emit
+# partial slices and are validated without them). Literal copies of the
+# registries — this module stays import-free of jax so the lint job can
+# file-load it — so growing either registry means growing these tuples in
+# the same PR, which is exactly the tripwire: a new system/env that never
+# lands in the committed matrix fails `--full` validation.
+FULL_MATRIX_SYSTEMS = (
+    "dial", "ippo", "mad4pg", "maddpg", "madqn", "madqn-fp", "mappo",
+    "qmix", "rec_ippo", "rec_mappo", "rial", "vdn",
+)
+FULL_MATRIX_ENVS = (
+    "lbf", "matrix_game", "robot_warehouse", "smax_lite",
+    "speaker_listener", "spread", "switch_game",
+)
+SPEED_SLICE_SYSTEMS = ("vdn", "ippo", "rec_ippo")
+
 
 def _num(x) -> bool:
     return isinstance(x, (int, float)) and not isinstance(x, bool)
 
 
 def check_eval_schema(doc: Dict) -> List[str]:
-    """Problems with a BENCH_eval.json document (schema in README.md)."""
+    """Problems with a BENCH_eval.json document (schema in docs/BENCH.md)."""
     errs: List[str] = []
     for k in ("seeds", "num_episodes", "num_envs", "train_iterations", "systems"):
         if k not in doc:
@@ -74,7 +90,7 @@ def check_eval_schema(doc: Dict) -> List[str]:
 
 
 def check_speed_schema(doc: Dict) -> List[str]:
-    """Problems with a BENCH_speed.json document (schema in README.md)."""
+    """Problems with a BENCH_speed.json document (schema in docs/BENCH.md)."""
     errs: List[str] = []
     cfg = doc.get("config")
     if not isinstance(cfg, dict):
@@ -113,12 +129,56 @@ def check_speed_schema(doc: Dict) -> List[str]:
     return errs
 
 
-def validate_path(path: str) -> List[str]:
-    """Validate one artifact file, dispatching on its contents."""
+def check_eval_full_matrix(doc: Dict) -> List[str]:
+    """Schema plus coverage: every registered (system, env) cell present.
+
+    The pin for the checked-in ``BENCH_eval.json``: the artifact must span
+    the full `FULL_MATRIX_SYSTEMS` x `FULL_MATRIX_ENVS` matrix (runnable
+    or reasoned-incompatible), so registry growth without a regenerated
+    matrix fails CI.
+    """
+    errs = check_eval_schema(doc)
+    systems = doc.get("systems", {})
+    if not isinstance(systems, dict):
+        return errs
+    for s in FULL_MATRIX_SYSTEMS:
+        if s not in systems:
+            errs.append(f"full matrix missing system {s!r}")
+            continue
+        envs = systems[s].get("envs", {})
+        for e in FULL_MATRIX_ENVS:
+            if e not in envs:
+                errs.append(f"full matrix missing cell ({s}, {e})")
+    return errs
+
+
+def check_speed_full_matrix(doc: Dict) -> List[str]:
+    """Schema plus coverage of the default throughput slice.
+
+    The checked-in ``BENCH_speed.json`` must carry a row per system in
+    `SPEED_SLICE_SYSTEMS` (one replay, one on-policy, one recurrent
+    family), keeping the perf trajectory comparable across PRs.
+    """
+    errs = check_speed_schema(doc)
+    cells = doc.get("cells")
+    have = {c.get("system") for c in cells} if isinstance(cells, list) else set()
+    for s in SPEED_SLICE_SYSTEMS:
+        if s not in have:
+            errs.append(f"speed slice missing system {s!r}")
+    return errs
+
+
+def validate_path(path: str, full: bool = False) -> List[str]:
+    """Validate one artifact file, dispatching on its contents.
+
+    ``full`` additionally enforces the checked-in coverage pins
+    (`check_eval_full_matrix` / `check_speed_full_matrix`) — used for the
+    committed artifacts, not the partial CI smoke slices.
+    """
     with open(path) as f:
         doc = json.load(f)
     if "cells" in doc:
-        return check_speed_schema(doc)
+        return check_speed_full_matrix(doc) if full else check_speed_schema(doc)
     if "systems" in doc:
-        return check_eval_schema(doc)
+        return check_eval_full_matrix(doc) if full else check_eval_schema(doc)
     return [f"{path}: neither a BENCH_eval (systems) nor BENCH_speed (cells) document"]

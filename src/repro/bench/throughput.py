@@ -215,7 +215,7 @@ def run_bench(
 
     Systems run at the `SMOKE_OVERRIDES` operating point unless
     ``system_overrides`` maps their name to an explicit config dict.  The
-    schema (documented in README.md) is validated in CI by
+    schema (documented in docs/BENCH.md) is validated in CI by
     ``scripts/check_bench_schema.py``; append rows here for future speed
     PRs instead of inventing ad-hoc metrics.
     """

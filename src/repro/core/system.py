@@ -30,6 +30,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.types import EvalMetrics, SystemState, TrainState, Transition
 from repro.envs.api import StepType
 from repro.envs.wrappers import AutoReset, EpisodeStats, replace_reset_keys
+from repro.nn.recurrent import reset_carry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -208,15 +209,12 @@ def _step_phase(system: System, tenv, st: SystemState, key):
     buffer = system.observe(st.buffer, tr)
 
     # a FIRST out of step marks an auto-reset boundary: executor carries
-    # (recurrent cores, comm messages) restart with the new episode
+    # (recurrent cores, comm messages) restart with the new episode, via
+    # the memory-core protocol's one reset-masking rule
     done = new_ts.step_type == StepType.FIRST
-
-    def sel(new, old):
-        d = done.reshape(done.shape + (1,) * (new.ndim - 1))
-        return jnp.where(d, new, old)
-
-    fresh_carry = system.initial_carry((num_envs,))
-    new_carry = jax.tree_util.tree_map(sel, fresh_carry, new_carry)
+    new_carry = reset_carry(
+        new_carry, done, initial=system.initial_carry((num_envs,))
+    )
 
     ep_reward = jnp.mean(jnp.stack(list(new_ts.reward.values())))
     done_f = done.astype(jnp.float32)

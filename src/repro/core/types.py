@@ -9,7 +9,8 @@ class Transition(NamedTuple):
 
     ``extras`` is the executor's side-channel: whatever ``select_actions``
     returns as its third output is stored here verbatim (PPO's behaviour
-    log-probs and values, DIAL's outgoing messages, ...), so on-policy
+    log-probs and values, DIAL's outgoing messages, recurrent systems'
+    incoming `Carry` under the ``"carry_in"`` key, ...), so on-policy
     trainers can consume act-time quantities without recomputation.
     ``step_type`` is the StepType of the observation at t — FIRST marks
     episode starts, which recurrent trainers use to reset their cores when
@@ -25,6 +26,28 @@ class Transition(NamedTuple):
     next_state: Any            # global state at t+1
     extras: Dict[str, Any] = {}
     step_type: Any = ()        # StepType at t (() = not recorded)
+
+
+class Carry(NamedTuple):
+    """Typed executor memory (the recurrent-core protocol's carry state).
+
+    Recurrent systems thread one of these per env copy through
+    ``select_actions`` and ``SystemState.carry``; feed-forward systems use
+    the empty pytree ``()`` instead.  ``hidden`` holds the memory cores'
+    state (any pytree — e.g. per-agent GRU hidden vectors, or nested
+    actor/critic dicts for recurrent PPO); ``message`` holds outgoing
+    inter-agent messages for communicating systems (DIAL/RIAL) and stays
+    the empty pytree elsewhere.
+
+    The runners reset a `Carry` at `AutoReset` FIRST boundaries via
+    `repro.nn.recurrent.reset_carry` (every leaf restarts at zero with the
+    new episode), and on-policy recurrent trainers store the incoming
+    carry per step in ``Transition.extras["carry_in"]`` so BPTT windows
+    re-run from the exact executor state (`window_start_carry`).
+    """
+
+    hidden: Any        # pytree of memory-core state (per agent, per env)
+    message: Any = ()  # outgoing comm messages (() = non-communicating)
 
 
 class EvalMetrics(NamedTuple):

@@ -1,3 +1,4 @@
+"""Pure-functional multi-agent envs: `REGISTRY`, `make_env`, wrapper stack."""
 from repro.envs.api import TimeStep, EnvSpec, ArraySpec, DiscreteSpec, StepType
 from repro.envs.matrix_game import MatrixGame
 from repro.envs.switch_game import SwitchGame
@@ -22,6 +23,7 @@ def _gridworld(cls):
     critics) built from wrappers instead of per-env code."""
 
     def factory(**kwargs):
+        """Build the wrapped gridworld env with the registered stack."""
         return ConcatObsState(AgentIdObs(cls(**kwargs)))
 
     factory.__name__ = f"make_{cls.__name__}"

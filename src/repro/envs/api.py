@@ -21,37 +21,44 @@ import jax.numpy as jnp
 
 
 class StepType:
+    """dm_env-style step-type codes (FIRST/MID/LAST)."""
     FIRST = 0
     MID = 1
     LAST = 2
 
 
 class TimeStep(NamedTuple):
+    """One multi-agent env emission (step type, rewards, discount, obs)."""
     step_type: jnp.ndarray            # () int32
     reward: Dict[str, jnp.ndarray]    # per-agent scalar
     discount: jnp.ndarray             # () shared
     observation: Dict[str, jnp.ndarray]
 
     def first(self):
+        """True when this is the FIRST step of an episode."""
         return self.step_type == StepType.FIRST
 
     def last(self):
+        """True when this is the LAST step of an episode."""
         return self.step_type == StepType.LAST
 
 
 @dataclasses.dataclass(frozen=True)
 class ArraySpec:
+    """Shape/dtype contract for one array-valued stream."""
     shape: Tuple[int, ...]
     dtype: Any = jnp.float32
 
 
 @dataclasses.dataclass(frozen=True)
 class DiscreteSpec:
+    """Spec for a discrete action with ``num_values`` choices."""
     num_values: int
     dtype: Any = jnp.int32
 
     @property
     def shape(self):
+        """Scalar: discrete actions are rank-0."""
         return ()
 
 
@@ -66,14 +73,17 @@ class EnvSpec:
 
     @property
     def num_agents(self) -> int:
+        """Number of agents."""
         return len(self.agent_ids)
 
 
 def agent_ids(n: int) -> Tuple[str, ...]:
+    """The canonical ``agent_0..agent_{n-1}`` id tuple."""
     return tuple(f"agent_{i}" for i in range(n))
 
 
 def shared_reward(ids, value) -> Dict[str, jnp.ndarray]:
+    """Broadcast one shared reward value to every agent id."""
     return {a: value for a in ids}
 
 

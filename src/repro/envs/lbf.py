@@ -31,6 +31,7 @@ from repro.envs.grid import apply_moves, hits_cells, resolve_collisions, sample_
 
 
 class LbfState(NamedTuple):
+    """Level-Based Foraging env state (positions, levels, food)."""
     t: jnp.ndarray            # () int32
     pos: jnp.ndarray          # (N, 2) int32
     levels: jnp.ndarray       # (N,) int32 agent levels (static per episode)
@@ -41,6 +42,7 @@ class LbfState(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class LevelBasedForaging:
+    """Level-Based Foraging: leveled agents pool to collect leveled food."""
     num_agents: int = 2
     grid_size: int = 8
     num_food: int = 3
@@ -54,19 +56,23 @@ class LevelBasedForaging:
 
     @property
     def agent_ids(self):
+        """The tuple of agent-id strings."""
         return agent_ids(self.num_agents)
 
     @property
     def num_actions(self):
+        """Number of discrete actions per agent."""
         return 6  # noop + 4 moves + load
 
     def obs_dim(self) -> int:
         # own pos(2) + own level(1)
         # + per food: rel(2) + level(1) + active(1)
         # + per other agent: rel(2) + level(1)
+        """Per-agent observation vector length."""
         return 3 + 4 * self.num_food + 3 * (self.num_agents - 1)
 
     def spec(self) -> EnvSpec:
+        """The env's `EnvSpec` (per-agent obs/action specs + global state)."""
         obs = ArraySpec((self.obs_dim(),))
         return EnvSpec(
             agent_ids=self.agent_ids,
@@ -105,6 +111,7 @@ class LevelBasedForaging:
         return out
 
     def reset(self, key):
+        """Start a new episode: ``key -> (state, FIRST timestep)``."""
         k_cells, k_al, k_fl = jax.random.split(key, 3)
         cells = sample_distinct_cells(
             k_cells, self.grid_size, self.num_agents + self.num_food
@@ -127,6 +134,7 @@ class LevelBasedForaging:
         return state, restart(self.agent_ids, self._obs(state))
 
     def step(self, state: LbfState, actions):
+        """Advance one step: ``(state, actions) -> (new_state, timestep)``."""
         acts = jnp.stack([actions[a] for a in self.agent_ids])  # (N,)
 
         # --- movement: food cells are solid

@@ -31,12 +31,14 @@ PENALTY = jnp.array(
 
 
 class MatrixGameState(NamedTuple):
+    """Matrix-game state: step count + previous joint action."""
     t: jnp.ndarray
     last_joint: jnp.ndarray  # (2,) int32
 
 
 @dataclasses.dataclass(frozen=True)
 class MatrixGame:
+    """Iterated cooperative matrix game (climbing payoff by default)."""
     payoff: jnp.ndarray = None  # (K,K)
     horizon: int = 10
 
@@ -46,17 +48,21 @@ class MatrixGame:
 
     @property
     def num_agents(self):
+        """Number of agents."""
         return 2
 
     @property
     def agent_ids(self):
+        """The tuple of agent-id strings."""
         return agent_ids(2)
 
     @property
     def num_actions(self):
+        """Number of discrete actions per agent."""
         return self.payoff.shape[0]
 
     def spec(self) -> EnvSpec:
+        """The env's `EnvSpec` (per-agent obs/action specs + global state)."""
         K = self.num_actions
         obs = ArraySpec((2 * K,))
         return EnvSpec(
@@ -73,11 +79,13 @@ class MatrixGame:
         return {a: oh for a in self.agent_ids}
 
     def global_state(self, state: MatrixGameState):
+        """The global state vector (centralised training input)."""
         K = self.num_actions
         valid = state.t > 0
         return jax.nn.one_hot(state.last_joint, K).reshape(-1) * valid
 
     def reset(self, key):
+        """Start a new episode: ``key -> (state, FIRST timestep)``."""
         del key
         state = MatrixGameState(
             t=jnp.zeros((), jnp.int32), last_joint=jnp.zeros((2,), jnp.int32)
@@ -85,6 +93,7 @@ class MatrixGame:
         return state, restart(self.agent_ids, self._obs(state))
 
     def step(self, state: MatrixGameState, actions):
+        """Advance one step: ``(state, actions) -> (new_state, timestep)``."""
         a0 = actions["agent_0"]
         a1 = actions["agent_1"]
         r = self.payoff[a0, a1]

@@ -28,6 +28,7 @@ from repro.envs.grid import apply_moves, hits_cells, resolve_collisions
 
 
 class RwareState(NamedTuple):
+    """RWARE-lite env state (robot poses, loads, outstanding requests)."""
     t: jnp.ndarray          # () int32
     pos: jnp.ndarray        # (N, 2) int32 robot cells
     carrying: jnp.ndarray   # (N,) int32 shelf index, -1 = unloaded
@@ -37,6 +38,7 @@ class RwareState(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class RobotWarehouse:
+    """RWARE-lite: robots ferry requested shelves to goals for +1."""
     num_agents: int = 2
     grid_size: int = 8
     num_shelves: int = 8
@@ -54,10 +56,12 @@ class RobotWarehouse:
 
     @property
     def agent_ids(self):
+        """The tuple of agent-id strings."""
         return agent_ids(self.num_agents)
 
     @property
     def num_actions(self):
+        """Number of discrete actions per agent."""
         return 6  # noop + 4 moves + load
 
     def _shelf_cells(self):
@@ -71,6 +75,7 @@ class RobotWarehouse:
 
     @property
     def shelf_pos(self):
+        """The static (num_shelves, 2) rack layout."""
         return jnp.asarray(self._shelf_cells(), jnp.int32)
 
     def _goal_cell(self):
@@ -78,6 +83,7 @@ class RobotWarehouse:
 
     @property
     def goal_pos(self):
+        """The static (num_goals, 2) delivery cells."""
         return jnp.asarray(self._goal_cell(), jnp.int32)
 
     @property
@@ -96,9 +102,11 @@ class RobotWarehouse:
         # own pos(2) + carrying(1) + rel goal(2)
         # + per shelf: rel(2) + requested(1) + present(1)
         # + per other agent: rel(2)
+        """Per-agent observation vector length."""
         return 5 + 4 * self.num_shelves + 2 * (self.num_agents - 1)
 
     def spec(self) -> EnvSpec:
+        """The env's `EnvSpec` (per-agent obs/action specs + global state)."""
         obs = ArraySpec((self.obs_dim(),))
         return EnvSpec(
             agent_ids=self.agent_ids,
@@ -139,6 +147,7 @@ class RobotWarehouse:
         return out
 
     def reset(self, key):
+        """Start a new episode: ``key -> (state, FIRST timestep)``."""
         k_pos, k_req, k_state = jax.random.split(key, 3)
         free = self._free_cells
         idx = jax.random.permutation(k_pos, free.shape[0])[: self.num_agents]
@@ -153,6 +162,7 @@ class RobotWarehouse:
         return state, restart(self.agent_ids, self._obs(state))
 
     def step(self, state: RwareState, actions):
+        """Advance one step: ``(state, actions) -> (new_state, timestep)``."""
         acts = jnp.stack([actions[a] for a in self.agent_ids])  # (N,)
         present = self._present(state.carrying)
 
@@ -184,6 +194,7 @@ class RobotWarehouse:
         key, k_new = jax.random.split(state.key)
 
         def draw(carry, i):
+            """Resample a request uniformly over the shelves."""
             req, k = carry
             k, kk = jax.random.split(k)
             logits = jnp.where(req, -1e9, 0.0)  # uniform over unrequested

@@ -30,6 +30,7 @@ _MOVES = jnp.array([[0.0, 0.0], [1.0, 0.0], [-1.0, 0.0], [0.0, 1.0], [0.0, -1.0]
 
 
 class SmaxState(NamedTuple):
+    """SMAX-lite env state (unit positions, healths, cooldowns)."""
     t: jnp.ndarray
     ally_pos: jnp.ndarray    # (N,2)
     ally_hp: jnp.ndarray     # (N,)
@@ -39,6 +40,7 @@ class SmaxState(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class SmaxLite:
+    """SMAC-style micro-battle: N allies vs scripted enemies."""
     num_agents: int = 3
     horizon: int = 50
     max_hp: float = 45.0
@@ -49,18 +51,22 @@ class SmaxLite:
 
     @property
     def agent_ids(self):
+        """The tuple of agent-id strings."""
         return agent_ids(self.num_agents)
 
     @property
     def num_actions(self):
+        """Number of discrete actions per agent."""
         return 5 + self.num_agents  # noop + 4 moves + attack each enemy
 
     def obs_dim(self) -> int:
+        """Per-agent observation vector length."""
         n = self.num_agents
         # own (pos 2, hp 1) + allies (n-1)*(rel 2, hp 1) + enemies n*(rel 2, hp 1)
         return 3 + (n - 1) * 3 + n * 3
 
     def spec(self) -> EnvSpec:
+        """The env's `EnvSpec` (per-agent obs/action specs + global state)."""
         return EnvSpec(
             agent_ids=self.agent_ids,
             observations={a: ArraySpec((self.obs_dim(),)) for a in self.agent_ids},
@@ -94,6 +100,7 @@ class SmaxLite:
         return out
 
     def global_state(self, state: SmaxState):
+        """The global state vector (centralised training input)."""
         return jnp.concatenate(
             [
                 state.ally_pos.reshape(-1),
@@ -104,6 +111,7 @@ class SmaxLite:
         )
 
     def reset(self, key):
+        """Start a new episode: ``key -> (state, FIRST timestep)``."""
         n = self.num_agents
         k1, k2 = jax.random.split(key)
         ally = jax.random.uniform(k1, (n, 2), minval=-1.0, maxval=-0.5)
@@ -118,6 +126,7 @@ class SmaxLite:
         return state, restart(self.agent_ids, self._obs(state))
 
     def step(self, state: SmaxState, actions):
+        """Advance one step: ``(state, actions) -> (new_state, timestep)``."""
         n = self.num_agents
         acts = jnp.stack([actions[a] for a in self.agent_ids])  # (N,)
         ally_alive = state.ally_hp > 0

@@ -26,6 +26,7 @@ _DIRS = jnp.array([[0.0, 0.0], [1.0, 0.0], [-1.0, 0.0], [0.0, 1.0], [0.0, -1.0]]
 
 
 class SLState(NamedTuple):
+    """Speaker-listener env state (target, listener pose, message)."""
     t: jnp.ndarray
     listener_pos: jnp.ndarray  # (2,)
     listener_vel: jnp.ndarray  # (2,)
@@ -36,6 +37,7 @@ class SLState(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class SpeakerListener:
+    """Cooperative speaker-listener: speaker signals the goal landmark."""
     num_landmarks: int = 3
     horizon: int = 25
     dt: float = 0.1
@@ -44,9 +46,11 @@ class SpeakerListener:
 
     @property
     def agent_ids(self):
+        """The tuple of agent-id strings."""
         return ("speaker", "listener")
 
     def spec(self) -> EnvSpec:
+        """The env's `EnvSpec` (per-agent obs/action specs + global state)."""
         C = self.num_landmarks
         return EnvSpec(
             agent_ids=self.agent_ids,
@@ -72,6 +76,7 @@ class SpeakerListener:
         }
 
     def global_state(self, state: SLState):
+        """The global state vector (centralised training input)."""
         C = self.num_landmarks
         return jnp.concatenate(
             [
@@ -84,6 +89,7 @@ class SpeakerListener:
         )
 
     def reset(self, key):
+        """Start a new episode: ``key -> (state, FIRST timestep)``."""
         k1, k2, k3 = jax.random.split(key, 3)
         lm = jax.random.uniform(k1, (self.num_landmarks, 2), minval=-1.0, maxval=1.0)
         pos = jax.random.uniform(k2, (2,), minval=-1.0, maxval=1.0)
@@ -99,6 +105,7 @@ class SpeakerListener:
         return state, restart(self.agent_ids, self._obs(state))
 
     def step(self, state: SLState, actions):
+        """Advance one step: ``(state, actions) -> (new_state, timestep)``."""
         msg = actions["speaker"]
         f = _DIRS[actions["listener"]] * self.accel
         vel = state.listener_vel * (1.0 - self.damping) + f * self.dt

@@ -26,6 +26,7 @@ _DIRS = jnp.array([[0.0, 0.0], [1.0, 0.0], [-1.0, 0.0], [0.0, 1.0], [0.0, -1.0]]
 
 
 class SpreadState(NamedTuple):
+    """Spread env state (agent poses/velocities, landmark positions)."""
     t: jnp.ndarray
     pos: jnp.ndarray        # (N,2)
     vel: jnp.ndarray        # (N,2)
@@ -34,6 +35,7 @@ class SpreadState(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class Spread:
+    """MPE simple-spread: cover all landmarks, avoid collisions."""
     num_agents: int = 3
     horizon: int = 25
     continuous: bool = False
@@ -44,13 +46,16 @@ class Spread:
 
     @property
     def agent_ids(self):
+        """The tuple of agent-id strings."""
         return agent_ids(self.num_agents)
 
     def obs_dim(self) -> int:
         # own pos(2) + vel(2) + rel landmarks (2N) + rel other agents (2(N-1))
+        """Per-agent observation vector length."""
         return 4 + 2 * self.num_agents + 2 * (self.num_agents - 1)
 
     def spec(self) -> EnvSpec:
+        """The env's `EnvSpec` (per-agent obs/action specs + global state)."""
         obs = ArraySpec((self.obs_dim(),))
         if self.continuous:
             act = ArraySpec((2,))
@@ -75,11 +80,13 @@ class Spread:
         return out
 
     def global_state(self, state: SpreadState):
+        """The global state vector (centralised training input)."""
         return jnp.concatenate(
             [state.pos.reshape(-1), state.vel.reshape(-1), state.landmarks.reshape(-1)]
         )
 
     def reset(self, key):
+        """Start a new episode: ``key -> (state, FIRST timestep)``."""
         k1, k2 = jax.random.split(key)
         pos = jax.random.uniform(k1, (self.num_agents, 2), minval=-1.0, maxval=1.0)
         lm = jax.random.uniform(k2, (self.num_agents, 2), minval=-1.0, maxval=1.0)
@@ -99,6 +106,7 @@ class Spread:
         return jnp.stack(fs)  # (N,2)
 
     def step(self, state: SpreadState, actions):
+        """Advance one step: ``(state, actions) -> (new_state, timestep)``."""
         f = self._forces(actions) * self.accel
         vel = state.vel * (1.0 - self.damping) + f * self.dt
         pos = jnp.clip(state.pos + vel * self.dt, -1.5, 1.5)

@@ -29,6 +29,7 @@ from repro.envs.api import (
 
 
 class SwitchState(NamedTuple):
+    """Switch-riddle env state (visit order, day, switch bit)."""
     t: jnp.ndarray           # day
     in_room: jnp.ndarray     # (N,) one-hot: who is in the room today
     has_been: jnp.ndarray    # (N,) bool
@@ -37,17 +38,21 @@ class SwitchState(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class SwitchGame:
+    """Foerster's switch riddle: Tell correctly (+1) or wrongly (-1)."""
     num_agents: int = 3
 
     @property
     def horizon(self):
+        """Episode length in steps."""
         return max(4 * self.num_agents - 6, 4)
 
     @property
     def agent_ids(self):
+        """The tuple of agent-id strings."""
         return agent_ids(self.num_agents)
 
     def spec(self) -> EnvSpec:
+        """The env's `EnvSpec` (per-agent obs/action specs + global state)."""
         obs = ArraySpec((2,))
         return EnvSpec(
             agent_ids=self.agent_ids,
@@ -64,6 +69,7 @@ class SwitchGame:
         }
 
     def global_state(self, state: SwitchState):
+        """The global state vector (centralised training input)."""
         return jnp.concatenate(
             [
                 state.in_room.astype(jnp.float32),
@@ -73,6 +79,7 @@ class SwitchGame:
         )
 
     def reset(self, key):
+        """Start a new episode: ``key -> (state, FIRST timestep)``."""
         key, sub = jax.random.split(key)
         first = jax.random.randint(sub, (), 0, self.num_agents)
         in_room = jax.nn.one_hot(first, self.num_agents)
@@ -86,6 +93,7 @@ class SwitchGame:
 
     def step(self, state: SwitchState, actions):
         # Tell only counts for the agent in the room.
+        """Advance one step: ``(state, actions) -> (new_state, timestep)``."""
         acts = jnp.stack([actions[a] for a in self.agent_ids])  # (N,)
         tell = jnp.sum(acts * state.in_room.astype(acts.dtype)) > 0
         all_visited = jnp.all(state.has_been)

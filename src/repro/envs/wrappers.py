@@ -48,15 +48,19 @@ class Wrapper:
         return getattr(self.env, name)
 
     def spec(self):
+        """Delegate to the inner env."""
         return self.env.spec()
 
     def reset(self, key):
+        """Delegate to the inner env."""
         return self.env.reset(key)
 
     def step(self, state, actions):
+        """Delegate to the inner env."""
         return self.env.step(state, actions)
 
     def global_state(self, state):
+        """Delegate to the inner env."""
         return self.env.global_state(state)
 
 
@@ -73,6 +77,7 @@ class AgentIdObs(Wrapper):
     """
 
     def spec(self):
+        """The inner spec with the one-hot id appended to each obs spec."""
         spec = self.env.spec()
         n = spec.num_agents
         obs = {
@@ -93,10 +98,12 @@ class AgentIdObs(Wrapper):
         return self._augment(self.env._obs(state))
 
     def reset(self, key):
+        """Reset the inner env; augment observations with agent ids."""
         state, ts = self.env.reset(key)
         return state, ts._replace(observation=self._augment(ts.observation))
 
     def step(self, state, actions):
+        """Step the inner env; augment observations with agent ids."""
         state, ts = self.env.step(state, actions)
         return state, ts._replace(observation=self._augment(ts.observation))
 
@@ -112,11 +119,13 @@ class ConcatObsState(Wrapper):
     """
 
     def spec(self):
+        """The inner spec with the synthesized concat-obs state spec."""
         spec = self.env.spec()
         dim = sum(spec.observations[a].shape[0] for a in spec.agent_ids)
         return dataclasses.replace(spec, state=ArraySpec((dim,)))
 
     def global_state(self, state):
+        """Global state = concatenation of every agent's observation."""
         obs = self.env._obs(state)
         return jnp.concatenate([obs[a] for a in tuple(self.env.agent_ids)])
 
@@ -125,6 +134,7 @@ class ConcatObsState(Wrapper):
 
 
 class AutoResetState(NamedTuple):
+    """AutoReset wrapper state: next reset key + the inner state."""
     key: Any     # PRNG key consumed by the next auto-reset
     inner: Any   # the wrapped env's state
 
@@ -148,15 +158,18 @@ class AutoReset(Wrapper):
     """
 
     def reset(self, key):
+        """Reset the inner env and stash the next auto-reset key."""
         inner, ts = self.env.reset(key)
         return AutoResetState(key=jax.random.fold_in(key, 1), inner=inner), ts
 
     def step(self, state, actions):
+        """Step; on LAST, restart in-place and emit the merged FIRST."""
         inner, ts = self.env.step(state.inner, actions)
         reset_inner, reset_ts = self.env.reset(state.key)
         done = ts.last()
 
         def sel(new, old):
+            """Choose the reset value where the episode just terminated."""
             return jax.tree_util.tree_map(
                 lambda n, o: jnp.where(done, n, o), new, old
             )
@@ -173,10 +186,12 @@ class AutoReset(Wrapper):
         return new_state, merged
 
     def global_state(self, state):
+        """Delegate to the inner env (unwrapping the AutoReset state)."""
         return self.env.global_state(state.inner)
 
 
 class EpisodeStatsState(NamedTuple):
+    """EpisodeStats wrapper state: running + last-completed stats."""
     inner: Any
     returns: Dict[str, Any]       # running per-agent return, current episode
     length: Any                   # () int32 — steps taken this episode
@@ -202,11 +217,13 @@ class EpisodeStats(Wrapper):
         return z, zero_i
 
     def reset(self, key):
+        """Reset the inner env with zeroed episode statistics."""
         inner, ts = self.env.reset(key)
         z, zero_i = self._zero_stats()
         return EpisodeStatsState(inner, z, zero_i, dict(z), zero_i), ts
 
     def step(self, state, actions):
+        """Step; accumulate returns/lengths, publish them at boundaries."""
         inner, ts = self.env.step(state.inner, actions)
         completed = ts.last() | ts.first()
         ret = {a: state.returns[a] + ts.reward[a] for a in state.returns}
@@ -223,6 +240,7 @@ class EpisodeStats(Wrapper):
         return new_state, ts
 
     def global_state(self, state):
+        """Delegate to the inner env (unwrapping the stats state)."""
         return self.env.global_state(state.inner)
 
 

@@ -15,6 +15,15 @@ Episodes are fixed-length lax.scans of ``env.horizon`` steps across
 ``num_envs`` vmapped env copies; early-terminating envs are handled by
 masking rewards after the first LAST step (no auto-reset — each env copy is
 exactly one episode).  Actions are greedy (``training=False``).
+
+Recurrent systems are first-class: the executor carry
+(`repro.core.types.Carry` — GRU hidden state, comm messages) starts at
+``initial_carry((num_envs,))`` and is threaded across every step of the
+episode scan, one memory slot per env copy, vmapped over seeds when the
+caller asks for a seed axis.  Each env copy runs exactly one episode, so
+no mid-scan resets are needed, and greedy returns are invariant to how
+episodes are chunked across ``num_envs`` (pinned by
+``tests/test_recurrent.py``).
 """
 from __future__ import annotations
 
@@ -62,6 +71,7 @@ def _episode_batch(system, train: TrainState, key, num_envs: int, horizon: int):
     )
 
     def step(sc, k_act):
+        """One greedy vectorised env step with reward/length masking."""
         env_state, ts, carry, done, rets, length = sc
         gs = jax.vmap(env.global_state)(env_state)
         actions, carry, _ = system.select_actions(
@@ -103,9 +113,11 @@ def make_evaluator(
     horizon = int(system.env.horizon)
 
     def eval_fn(train_or_params, key) -> EvalMetrics:
+        """The pure evaluator: ``(train_or_params, key) -> EvalMetrics``."""
         train = _as_train_state(train_or_params)
 
         def one_round(key, _):
+            """One batch of ``num_envs`` episodes (scanned ``num_rounds`` times)."""
             key, kr = jax.random.split(key)
             return key, _episode_batch(system, train, kr, num_envs, horizon)
 

@@ -25,10 +25,12 @@ def _as_matrix(scores) -> np.ndarray:
 
 
 def mean(scores) -> float:
+    """Mean over the flattened score matrix."""
     return float(np.mean(_as_matrix(scores)))
 
 
 def median(scores) -> float:
+    """Median over the flattened score matrix."""
     return float(np.median(_as_matrix(scores)))
 
 

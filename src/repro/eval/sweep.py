@@ -11,7 +11,7 @@ carry scores, incompatible ones carry the spec-driven reason (from
 ``repro.systems.registry.compatibility``), so the artifact doubles as the
 library's compatibility matrix.
 
-Artifacts: ``BENCH_eval.json`` (schema documented in README.md) and a
+Artifacts: ``BENCH_eval.json`` (schema documented in docs/BENCH.md) and a
 markdown table next to it.
 """
 from __future__ import annotations

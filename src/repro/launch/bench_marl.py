@@ -3,9 +3,9 @@
 Times every runner rung (python loop / fused Anakin / shard_map) and the
 serial-vs-vmapped-seed speedup for a systems x envs slice, and writes the
 ``BENCH_speed.json`` + ``BENCH_speed.md`` perf-trajectory artifact (schema
-in README.md, validated by ``scripts/check_bench_schema.py``).
+in docs/BENCH.md, validated by ``scripts/check_bench_schema.py``).
 
-  # the default slice (vdn + ippo on matrix_game + spread)
+  # the default slice (vdn + ippo + rec_ippo on matrix_game + spread)
   PYTHONPATH=src python -m repro.launch.bench_marl
 
   # CI smoke scale
@@ -25,8 +25,9 @@ def main():
     p = argparse.ArgumentParser()
     p.add_argument(
         "--systems", nargs="+", choices=sorted(SYSTEMS) + ["all"],
-        default=["vdn", "ippo"],
-        help="systems to bench (default: one replay + one on-policy family)",
+        default=["vdn", "ippo", "rec_ippo"],
+        help="systems to bench (default: one replay, one on-policy and "
+        "one recurrent family)",
     )
     p.add_argument(
         "--envs", nargs="+", choices=sorted(ENVS) + ["all"],

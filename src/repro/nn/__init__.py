@@ -20,6 +20,7 @@ from repro.nn.layers import (
     GRUCell,
     Sequential,
 )
+from repro.nn.recurrent import ScannedRNN, reset_carry, window_start_carry
 from repro.nn import initializers
 
 __all__ = [
@@ -29,6 +30,9 @@ __all__ = [
     "LayerNorm",
     "MLP",
     "GRUCell",
+    "ScannedRNN",
     "Sequential",
     "initializers",
+    "reset_carry",
+    "window_start_carry",
 ]

@@ -1,0 +1,152 @@
+"""The shared memory-core protocol for recurrent executors.
+
+Every recurrent system in the library (rec-IPPO / rec-MAPPO / DIAL / RIAL)
+threads its memory through the same three pieces:
+
+* `ScannedRNN` — a GRU core with the JaxMARL-style
+  ``(carry, inputs) -> (carry, outputs)`` contract, stepped once at act
+  time and `lax.scan`-unrolled over stored trajectories at train time,
+  with episode-boundary resets applied *inside* the scan (no host round
+  trips);
+* `reset_carry` — the one reset-masking rule: zero (or re-initialise)
+  executor memory wherever a step is the FIRST of a new episode.  The
+  Anakin/shard_map runners apply it at `AutoReset` boundaries, and BPTT
+  trainers apply it at stored FIRST rows — both call this helper;
+* `window_start_carry` — the one code path deciding what memory a BPTT
+  window opens with.  On-policy recurrent trainers store the executor's
+  incoming carry per step in ``Transition.extras["carry_in"]`` and re-run
+  from the stored window-start carry (exact: on-policy windows never span
+  a parameter update).  Trainers that do not store carries (DIAL/RIAL)
+  fall back to the R2D2 *zero start-state approximation* — a window that
+  opens mid-episode replays from zeroed memory, accepting a small state
+  mismatch.  This fallback line is the approximation's single home; it
+  matters only when ``rollout_len`` is shorter than the episode.
+
+The executor-side carry itself is the typed `repro.core.types.Carry`
+(hidden state + optional outgoing messages), stored per env copy in
+``SystemState.carry`` and reset by the runners via `reset_carry`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import GRUCell
+
+
+@dataclasses.dataclass(frozen=True)
+class ScannedRNN:
+    """A GRU memory core with a ``(carry, inputs) -> (carry, outputs)`` contract.
+
+    The act-time and train-time faces of one recurrent cell:
+
+    * ``step(params, carry, x[, reset])`` — one cell application, used by
+      executors (one env step at a time);
+    * ``unroll(params, carry, xs[, resets])`` — ``lax.scan`` of ``step``
+      over a leading time axis, used by BPTT trainers re-running a stored
+      trajectory differentiably.
+
+    Both faces apply the same reset rule before the cell fires: where
+    ``reset`` is True the incoming carry is zeroed, so hidden state never
+    leaks across an episode boundary (the rollout-scan analogue of
+    JaxMARL's ScannedRNN reset masking).  The output at each step is the
+    new hidden state.
+    """
+
+    in_dim: int
+    hidden_dim: int
+
+    @property
+    def cell(self) -> GRUCell:
+        """The underlying GRU cell (dataclass layers are free to build)."""
+        return GRUCell(self.in_dim, self.hidden_dim)
+
+    def init(self, key):
+        """Initialise the cell parameters."""
+        return self.cell.init(key)
+
+    def initial_carry(self, batch_shape=()):
+        """The zero hidden state, shaped ``(*batch_shape, hidden_dim)``."""
+        return jnp.zeros((*batch_shape, self.hidden_dim))
+
+    def step(self, params, carry, x, reset=None):
+        """One cell application: ``(carry, x) -> (new_carry, output)``.
+
+        ``reset`` (optional, shape ``carry.shape[:-1]``) zeroes the
+        incoming carry where True before the cell fires — pass the
+        FIRST-step mask when stepping across episode boundaries; omit it
+        when the caller guarantees fresh carries (the runners reset
+        `SystemState.carry` themselves via `reset_carry`).
+        """
+        if reset is not None:
+            carry = jnp.where(reset[..., None], jnp.zeros_like(carry), carry)
+        h = self.cell.apply(params, carry, x)
+        return h, h
+
+    def unroll(self, params, carry, xs, resets=None):
+        """Scan ``step`` over a leading time axis.
+
+        ``xs``: ``(T, ..., in_dim)`` inputs; ``resets``: ``(T, ...)``
+        booleans marking rows that start a new episode (zero the carry
+        before that row's cell).  Returns ``(final_carry, outputs)`` with
+        outputs stacked ``(T, ..., hidden_dim)``.
+        """
+        if resets is None:
+            resets = jnp.zeros(xs.shape[:-1], bool)
+
+        def body(h, inp):
+            x, r = inp
+            return self.step(params, h, x, r)
+
+        return jax.lax.scan(body, carry, (xs, resets))
+
+    def axes(self):
+        """Logical sharding axes (delegates to the GRU cell)."""
+        return self.cell.axes()
+
+
+def reset_carry(carry, reset, initial=None):
+    """Reset executor memory where ``reset`` is True (the one masking rule).
+
+    ``carry`` is any pytree of arrays whose leading dims match ``reset``'s
+    shape (per-env hidden states, outgoing messages, ...); ``reset`` is
+    broadcast over each leaf's trailing dims.  ``initial`` supplies the
+    fresh value (defaults to zeros, which every memory core in the library
+    uses as its start state).
+
+    Call sites: the runners' rollout scan (zero `SystemState.carry` at
+    `AutoReset` FIRST boundaries) and BPTT trainers (zero the replayed
+    carry at stored FIRST rows).
+    """
+    if initial is None:
+        initial = jax.tree_util.tree_map(jnp.zeros_like, carry)
+
+    def sel(fresh, old):
+        r = reset.reshape(reset.shape + (1,) * (old.ndim - reset.ndim))
+        return jnp.where(r, fresh, old)
+
+    return jax.tree_util.tree_map(sel, initial, carry)
+
+
+def window_start_carry(extras, initial_carry, batch_shape):
+    """The memory a BPTT window opens with — stored carry, else zeros.
+
+    On-policy recurrent trainers (rec-IPPO / rec-MAPPO) record the
+    executor's incoming carry per step in ``extras["carry_in"]``; the
+    window-start carry is then the stored row 0, which is *exact*: the
+    rollout accumulator consumes-and-resets on every update, so the stored
+    carries were produced by the parameters being trained.
+
+    Trainers that do not store carries fall back to
+    ``initial_carry(batch_shape)`` — the R2D2 zero start-state
+    approximation, kept to this single code path: a window that opens
+    mid-episode replays from zeroed memory rather than the executor's true
+    state.  Exact only when windows are episode-aligned (DIAL's default
+    ``rollout_len = env.horizon``); see ROADMAP for the episode-aligned
+    alternative if mid-episode windows regress at scale.
+    """
+    if "carry_in" in extras:
+        return jax.tree_util.tree_map(lambda x: x[0], extras["carry_in"])
+    return initial_carry(batch_shape)

@@ -1,8 +1,10 @@
+"""The MARL algorithm families, all behind the one `System` API + registry."""
 from repro.systems.madqn import make_madqn
 from repro.systems.vdn import make_vdn
 from repro.systems.qmix import make_qmix
 from repro.systems.ippo import make_ippo
 from repro.systems.mappo import make_mappo
+from repro.systems.onpolicy import make_rec_ippo, make_rec_mappo
 from repro.systems.maddpg import make_maddpg, make_mad4pg
 from repro.systems.dial import make_dial
 from repro.systems.registry import (
@@ -19,6 +21,8 @@ __all__ = [
     "make_qmix",
     "make_ippo",
     "make_mappo",
+    "make_rec_ippo",
+    "make_rec_mappo",
     "make_maddpg",
     "make_mad4pg",
     "make_dial",

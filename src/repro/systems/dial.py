@@ -15,9 +15,16 @@ and once a `rollout_len` trajectory is complete the trainer re-runs the
 recurrent nets over it differentiably (same actions; DIAL recomputes the
 messages with gradients, RIAL teacher-forces the stored hard bits) and
 minimises the TD error of the chosen-action Q's against target-network
-targets. Recurrent state is reset wherever a stored row starts a new
-episode (`Transition.step_type == FIRST`); trajectories that begin
-mid-episode use the standard R2D2 zero start-state approximation.
+targets.
+
+Memory handling follows the shared memory-core protocol
+(`repro.nn.recurrent`): the per-agent GRU is a `ScannedRNN`, the executor
+carry is the typed `repro.core.types.Carry` (hidden + outgoing messages),
+boundary resets inside the BPTT scan use `reset_carry` at stored FIRST
+rows, and the window-start memory comes from `window_start_carry` — DIAL
+stores no per-step carries, so windows that open mid-episode fall back to
+the R2D2 zero start-state approximation documented there (exact at the
+default episode-aligned ``rollout_len = env.horizon``).
 """
 from __future__ import annotations
 
@@ -37,13 +44,15 @@ from repro.core.buffer import (
 )
 from repro.core.modules.communication import BroadcastedCommunication, dru
 from repro.core.system import System
-from repro.core.types import TrainState, Transition
+from repro.core.types import Carry, TrainState, Transition
 from repro.envs.api import StepType
-from repro.nn import GRUCell, MLP
+from repro.nn import MLP, ScannedRNN
+from repro.nn.recurrent import reset_carry, window_start_carry
 
 
 @dataclasses.dataclass(frozen=True)
 class DialConfig:
+    """DIAL/RIAL hyperparameters (channel, exploration, BPTT window)."""
     hidden_dim: int = 64
     channel_size: int = 1
     noise_std: float = 0.5
@@ -66,13 +75,16 @@ class DialConfig:
 
 
 class DialNets(NamedTuple):
+    """The shared per-agent network stack (encoder -> memory core -> heads)."""
+
     encoder: MLP
-    core: GRUCell
+    core: ScannedRNN
     q_head: MLP
     msg_head: MLP
 
 
 def make_dial(env, cfg: DialConfig = DialConfig()) -> System:
+    """Build the DIAL (or RIAL, via ``cfg.protocol``) communicating `System`."""
     spec = env.spec()
     ids = list(spec.agent_ids)
     n = len(ids)
@@ -86,7 +98,7 @@ def make_dial(env, cfg: DialConfig = DialConfig()) -> System:
     msg_out = 2 * cfg.channel_size if rial else cfg.channel_size
     nets = DialNets(
         encoder=MLP((in_dim, cfg.hidden_dim), activate_final=True),
-        core=GRUCell(cfg.hidden_dim, cfg.hidden_dim),
+        core=ScannedRNN(cfg.hidden_dim, cfg.hidden_dim),
         q_head=MLP((cfg.hidden_dim, cfg.hidden_dim, num_actions)),
         msg_head=MLP((cfg.hidden_dim, cfg.hidden_dim, msg_out)),
     )
@@ -96,6 +108,7 @@ def make_dial(env, cfg: DialConfig = DialConfig()) -> System:
     )
 
     def init_train(key):
+        """Initialise the `TrainState` (params, targets, optimizer, steps)."""
         k1, k2, k3, k4 = jax.random.split(key, 4)
         params = {
             "encoder": nets.encoder.init(k1),
@@ -106,20 +119,25 @@ def make_dial(env, cfg: DialConfig = DialConfig()) -> System:
         return TrainState(params, params, opt.init(params), jnp.zeros((), jnp.int32))
 
     def agent_step(params, obs_a, msg_in, h):
-        """One recurrent step for one agent (shared weights)."""
+        """One memory-core step for one agent (shared weights)."""
         x = jnp.concatenate([obs_a, msg_in], axis=-1) if cfg.use_comm else obs_a
         z = nets.encoder.apply(params["encoder"], x)
-        h = nets.core.apply(params["core"], h, z)
-        q = nets.q_head.apply(params["q_head"], h)
-        m = nets.msg_head.apply(params["msg_head"], h)
+        h, y = nets.core.step(params["core"], h, z)
+        q = nets.q_head.apply(params["q_head"], y)
+        m = nets.msg_head.apply(params["msg_head"], y)
         return q, m, h
 
     def initial_carry(batch_shape):
-        h = {a: jnp.zeros((*batch_shape, cfg.hidden_dim)) for a in ids}
-        msg = {a: jnp.zeros((*batch_shape, cfg.channel_size)) for a in ids}
-        return {"h": h, "msg": msg}
+        """The executor's initial memory for a ``batch_shape`` of envs."""
+        return Carry(
+            hidden={a: nets.core.initial_carry(batch_shape) for a in ids},
+            message={
+                a: jnp.zeros((*batch_shape, cfg.channel_size)) for a in ids
+            },
+        )
 
     def eps_at(steps):
+        """Linearly-decayed exploration epsilon after ``steps`` updates."""
         frac = jnp.clip(steps / cfg.eps_decay_updates, 0.0, 1.0)
         return cfg.eps_start + frac * (cfg.eps_end - cfg.eps_start)
 
@@ -129,14 +147,15 @@ def make_dial(env, cfg: DialConfig = DialConfig()) -> System:
     # ------------------------------------------------------------ executor
 
     def select_actions(train: TrainState, obs, state, carry, key, training=True):
+        """Eps-greedy act step; messages ride the typed `Carry` and extras."""
         del state  # decentralised execution
         k_dru, k_act = jax.random.split(key)
-        incoming = comm.route(carry["msg"]) if cfg.use_comm else None
+        incoming = comm.route(carry.message) if cfg.use_comm else None
         eps = eps_at(train.steps) if training else 0.0
         actions, new_h, out_msgs, msg_bits = {}, {}, {}, {}
         for i, a in enumerate(ids):
             msg_in = incoming[a] if cfg.use_comm else _no_msg(obs[a])
-            q, m, h = agent_step(train.params, obs[a], msg_in, carry["h"][a])
+            q, m, h = agent_step(train.params, obs[a], msg_in, carry.hidden[a])
             greedy = jnp.argmax(q, axis=-1)
             k_rand, k_explore = jax.random.split(jax.random.fold_in(k_act, i))
             rand = jax.random.randint(k_rand, greedy.shape, 0, num_actions)
@@ -166,7 +185,7 @@ def make_dial(env, cfg: DialConfig = DialConfig()) -> System:
         extras = {"msgs": out_msgs}
         if rial:
             extras["msg_bits"] = msg_bits
-        return actions, {"h": new_h, "msg": out_msgs}, extras
+        return actions, Carry(hidden=new_h, message=out_msgs), extras
 
     # ------------------------------------------------------------- trainer
 
@@ -176,22 +195,23 @@ def make_dial(env, cfg: DialConfig = DialConfig()) -> System:
         DIAL: messages are recomputed with gradients (the channel is part of
         the computation graph). RIAL: stored hard bits are teacher-forced
         (no cross-agent gradients); returns message Q-values as well.
-        Recurrent state is zeroed at rows whose step_type is FIRST, matching
-        the executor's auto-reset carry. Ends with one bootstrap step on the
-        final next-observation. Returns (qs, q_boot, msg_qs, msg_q_boot) —
-        the msg outputs are {} for DIAL.
+        Memory is reset at stored FIRST rows via the shared `reset_carry`
+        rule, and the window opens from `window_start_carry` (DIAL stores
+        no carries, so this is the documented zero start-state path). Ends
+        with one bootstrap step on the final next-observation. Returns
+        (qs, q_boot, msg_qs, msg_q_boot) — the msg outputs are {} for DIAL.
         """
         B = traj.discount.shape[1]
-        carry0 = initial_carry((B,))
+        carry0 = window_start_carry(traj.extras, initial_carry, (B,))
 
         def cell(carry, key, obs_t, msgs_t):
             """One re-run step: per-agent Q/message/hidden from a row."""
             k_dru = key
-            incoming = comm.route(carry["msg"]) if cfg.use_comm else None
+            incoming = comm.route(carry.message) if cfg.use_comm else None
             qs, new_h, out_msgs, msg_qs = {}, {}, {}, {}
             for i, a in enumerate(ids):
                 msg_in = incoming[a] if cfg.use_comm else _no_msg(obs_t[a])
-                q, m, h = agent_step(params, obs_t[a], msg_in, carry["h"][a])
+                q, m, h = agent_step(params, obs_t[a], msg_in, carry.hidden[a])
                 qs[a] = q
                 new_h[a] = h
                 if rial:
@@ -201,17 +221,16 @@ def make_dial(env, cfg: DialConfig = DialConfig()) -> System:
                     out_msgs[a] = dru(
                         m, jax.random.fold_in(k_dru, i), cfg.noise_std, training
                     )
-            return {"h": new_h, "msg": out_msgs}, qs, msg_qs
+            return Carry(hidden=new_h, message=out_msgs), qs, msg_qs
 
         def step(c, data_t):
+            """One BPTT row: reset memory at FIRST rows, then apply the cell."""
             carry, key = c
             key, k_dru = jax.random.split(key)
-            # zero the recurrent state where this row starts a new episode
+            # memory (hidden + stale messages) restarts where this row
+            # starts a new episode, matching the executor's auto-reset carry
             first = data_t.step_type == StepType.FIRST
-            mask = lambda z: jnp.where(
-                first.reshape(first.shape + (1,) * (z.ndim - 1)), 0.0, z
-            )
-            carry = jax.tree_util.tree_map(mask, carry)
+            carry = reset_carry(carry, first)
             carry, qs, msg_qs = cell(carry, k_dru, data_t.obs, data_t.extras["msgs"])
             return (carry, key), (qs, msg_qs)
 
@@ -223,6 +242,7 @@ def make_dial(env, cfg: DialConfig = DialConfig()) -> System:
         return qs, q_boot, msg_qs, msg_q_boot
 
     def loss_fn(params, target_params, traj: Transition, key):
+        """Mean TD error of the re-run Q's (plus message TD for RIAL)."""
         k1, k2 = jax.random.split(key)
         qs, q_boot, msg_qs, msg_q_boot = q_trajectory(params, traj, k1, True)
         qs_t, q_boot_t, msg_qs_t, msg_q_boot_t = jax.tree_util.tree_map(
@@ -256,6 +276,7 @@ def make_dial(env, cfg: DialConfig = DialConfig()) -> System:
         return total / count
 
     def update(train: TrainState, buffer, key):
+        """One BPTT update over the consumed rollout (+ periodic target sync)."""
         traj = rollout_take(buffer)
         loss, grads = jax.value_and_grad(loss_fn)(
             train.params, train.target_params, traj, key
@@ -279,6 +300,7 @@ def make_dial(env, cfg: DialConfig = DialConfig()) -> System:
     # ------------------------------------------------------------- dataset
 
     def example_transition():
+        """A zero `Transition` fixing the buffer's shapes and dtypes."""
         obs = {a: jnp.zeros(spec.observations[a].shape) for a in ids}
         extras = {"msgs": {a: jnp.zeros((cfg.channel_size,)) for a in ids}}
         if rial:
@@ -298,6 +320,7 @@ def make_dial(env, cfg: DialConfig = DialConfig()) -> System:
         )
 
     def init_buffer(num_envs: int):
+        """A fresh experience buffer for ``num_envs`` parallel envs."""
         return rollout_init(example_transition(), rollout_len, num_envs)
 
     name = cfg.protocol if cfg.use_comm else "rec-madqn"

@@ -33,6 +33,7 @@ from repro.nn import MLP
 
 @dataclasses.dataclass(frozen=True)
 class MaddpgConfig:
+    """MADDPG/MAD4PG hyperparameters (nets, noise, replay, C51 support)."""
     hidden_sizes: Sequence[int] = (64, 64)
     actor_lr: float = 1e-3
     critic_lr: float = 3e-3
@@ -52,6 +53,7 @@ class MaddpgConfig:
 
 
 def make_maddpg(env, cfg: MaddpgConfig = MaddpgConfig(), architecture=None) -> System:
+    """Build the centralised-critic DDPG `System` (continuous control)."""
     spec: EnvSpec = env.spec()
     ids = list(spec.agent_ids)
     arch = architecture or CentralisedQValueCritic(agent_order=tuple(ids))
@@ -65,6 +67,7 @@ def make_maddpg(env, cfg: MaddpgConfig = MaddpgConfig(), architecture=None) -> S
 
     def critic_in_dim(a):
         # infer by building a dummy critic input
+        """Centralised critic input: global state + every agent's action."""
         obs = {b: jnp.zeros((obs_dims[b],)) for b in ids}
         acts = {b: jnp.zeros((act_dims[b],)) for b in ids}
         gs = jnp.zeros((state_dim,))
@@ -82,6 +85,7 @@ def make_maddpg(env, cfg: MaddpgConfig = MaddpgConfig(), architecture=None) -> S
     )
 
     def init_train(key):
+        """Initialise the `TrainState` (params, targets, optimizer, steps)."""
         ka, kc = jax.random.split(key)
         kas = jax.random.split(ka, len(ids))
         kcs = jax.random.split(kc, len(ids))
@@ -96,9 +100,11 @@ def make_maddpg(env, cfg: MaddpgConfig = MaddpgConfig(), architecture=None) -> S
         return TrainState(params, params, opt_state, jnp.zeros((), jnp.int32))
 
     def policy(params, agent, obs):
+        """The deterministic policy's action for one agent (tanh-squashed)."""
         return jnp.tanh(actors[agent].apply(params["actor"][agent], obs))
 
     def critic_value(params, agent, obs, acts, gs):
+        """The critic's value (scalar or C51 logits) for one agent."""
         cin = arch.critic_input(obs, acts, gs, agent)
         out = critics[agent].apply(params["critic"][agent], cin)
         if cfg.distributional:
@@ -107,6 +113,7 @@ def make_maddpg(env, cfg: MaddpgConfig = MaddpgConfig(), architecture=None) -> S
         return out[..., 0], out
 
     def select_actions(train, obs, state, carry, key, training=True):
+        """Deterministic actions + exploration noise when training."""
         del state  # decentralised execution
         actions = {}
         for i, a in enumerate(ids):
@@ -121,6 +128,7 @@ def make_maddpg(env, cfg: MaddpgConfig = MaddpgConfig(), architecture=None) -> S
         return actions, carry, {}
 
     def initial_carry(batch_shape):
+        """The executor's initial memory for a ``batch_shape`` of envs."""
         del batch_shape
         return ()
 
@@ -142,6 +150,7 @@ def make_maddpg(env, cfg: MaddpgConfig = MaddpgConfig(), architecture=None) -> S
         return out
 
     def critic_loss_fn(cparams, params, target_params, batch: Transition):
+        """TD (or C51 cross-entropy) loss against target actions/values."""
         loss = 0.0
         p = dict(params, critic=cparams)
         next_acts = {
@@ -173,6 +182,7 @@ def make_maddpg(env, cfg: MaddpgConfig = MaddpgConfig(), architecture=None) -> S
         return loss
 
     def actor_loss_fn(aparams, params, batch: Transition):
+        """Deterministic policy-gradient loss through the frozen critic."""
         loss = 0.0
         p = dict(params, actor=aparams)
         for a in ids:
@@ -183,6 +193,7 @@ def make_maddpg(env, cfg: MaddpgConfig = MaddpgConfig(), architecture=None) -> S
         return loss
 
     def update(train: TrainState, buffer, key):
+        """One trainer update: ``(train, buffer, key) -> (train, buffer, metrics)``."""
         batch = buffer_sample(buffer, key, cfg.batch_size)
         closs, cgrads = jax.value_and_grad(critic_loss_fn)(
             train.params["critic"], train.params, train.target_params, batch
@@ -216,6 +227,7 @@ def make_maddpg(env, cfg: MaddpgConfig = MaddpgConfig(), architecture=None) -> S
         )
 
     def example_transition():
+        """A zero `Transition` fixing the buffer's shapes and dtypes."""
         obs = {a: jnp.zeros(spec.observations[a].shape) for a in ids}
         return Transition(
             obs=obs,
@@ -230,6 +242,7 @@ def make_maddpg(env, cfg: MaddpgConfig = MaddpgConfig(), architecture=None) -> S
         )
 
     def init_buffer(num_envs: int):
+        """A fresh experience buffer for ``num_envs`` parallel envs."""
         del num_envs  # replay rows are flattened across envs
         return buffer_init(example_transition(), cfg.buffer_capacity)
 
@@ -249,5 +262,6 @@ def make_maddpg(env, cfg: MaddpgConfig = MaddpgConfig(), architecture=None) -> S
 
 
 def make_mad4pg(env, cfg: MaddpgConfig = MaddpgConfig(), architecture=None) -> System:
+    """MADDPG with a C51 distributional critic (the MAD4PG variant)."""
     cfg = dataclasses.replace(cfg, distributional=True)
     return make_maddpg(env, cfg, architecture)

@@ -8,4 +8,5 @@ from repro.systems.offpolicy import OffPolicyConfig, make_offpolicy_system
 
 
 def make_madqn(env, cfg: OffPolicyConfig = OffPolicyConfig()):
+    """Build independent double-DQN learners (optionally fingerprinted)."""
     return make_offpolicy_system(env, cfg, mixer=None, name="madqn")

@@ -30,6 +30,7 @@ from repro.nn import MLP
 
 @dataclasses.dataclass(frozen=True)
 class OffPolicyConfig:
+    """Replay-family hyperparameters (nets, replay table, exploration)."""
     hidden_sizes: Sequence[int] = (64, 64)
     learning_rate: float = 5e-4
     gamma: float = 0.99
@@ -48,6 +49,7 @@ class OffPolicyConfig:
 
 
 def make_offpolicy_system(env, cfg: OffPolicyConfig, mixer=None, name="madqn") -> System:
+    """Build a replay-based Q-learning `System` (MADQN/VDN/QMIX core)."""
     spec: EnvSpec = env.spec()
     ids = list(spec.agent_ids)
     num_actions = {a: spec.actions[a].num_values for a in ids}
@@ -70,16 +72,19 @@ def make_offpolicy_system(env, cfg: OffPolicyConfig, mixer=None, name="madqn") -
     )
 
     def init_params(key):
+        """Initialise per-agent Q-net (and mixer) parameters."""
         if share:
             return {"shared": nets[ids[0]].init(key)}
         keys = jax.random.split(key, len(ids))
         return {a: nets[a].init(k) for a, k in zip(ids, keys)}
 
     def q_values(params, agent, obs):
+        """Per-agent Q-values for an observation batch."""
         p = params["shared"] if share else params[agent]
         return nets[agent].apply(p, obs)
 
     def init_train(key) -> TrainState:
+        """Initialise the `TrainState` (params, targets, optimizer, steps)."""
         k1, k2 = jax.random.split(key)
         params = {"q": init_params(k1)}
         if mixer is not None:
@@ -92,6 +97,7 @@ def make_offpolicy_system(env, cfg: OffPolicyConfig, mixer=None, name="madqn") -
         )
 
     def eps_at(steps):
+        """Linearly-decayed exploration epsilon after ``steps`` updates."""
         frac = jnp.clip(steps / cfg.eps_decay_steps, 0.0, 1.0)
         return cfg.eps_start + frac * (cfg.eps_end - cfg.eps_start)
 
@@ -101,6 +107,7 @@ def make_offpolicy_system(env, cfg: OffPolicyConfig, mixer=None, name="madqn") -
         return fp.augment(obs, eps_at(train.steps), train.steps)
 
     def select_actions(train: TrainState, obs, state, carry, key, training=True):
+        """Eps-greedy actions from the per-agent Q-nets."""
         del state  # decentralised execution
         obs = _augment(obs, train)
         eps = eps_at(train.steps) if training else 0.0
@@ -115,12 +122,14 @@ def make_offpolicy_system(env, cfg: OffPolicyConfig, mixer=None, name="madqn") -
         return actions, carry, {}
 
     def initial_carry(batch_shape):
+        """The executor's initial memory for a ``batch_shape`` of envs."""
         del batch_shape
         return ()
 
     # ------------------------------------------------------------- trainer
 
     def loss_fn(params, target_params, batch: Transition, steps):
+        """Double-DQN TD loss (mixed over agents when a mixer is set)."""
         obs = batch.obs
         next_obs = batch.next_obs
         if fp is not None:
@@ -157,6 +166,7 @@ def make_offpolicy_system(env, cfg: OffPolicyConfig, mixer=None, name="madqn") -
         return jnp.mean(jnp.square(td))
 
     def update(train: TrainState, buffer, key):
+        """One trainer update: ``(train, buffer, key) -> (train, buffer, metrics)``."""
         batch = buffer_sample(buffer, key, cfg.batch_size)
         loss, grads = jax.value_and_grad(loss_fn)(
             train.params, train.target_params, batch, train.steps
@@ -180,6 +190,7 @@ def make_offpolicy_system(env, cfg: OffPolicyConfig, mixer=None, name="madqn") -
     # ------------------------------------------------------------- dataset
 
     def example_transition():
+        """A zero `Transition` fixing the buffer's shapes and dtypes."""
         obs = {a: jnp.zeros(spec.observations[a].shape) for a in ids}
         return Transition(
             obs=obs,
@@ -194,6 +205,7 @@ def make_offpolicy_system(env, cfg: OffPolicyConfig, mixer=None, name="madqn") -
         )
 
     def init_buffer(num_envs: int):
+        """A fresh experience buffer for ``num_envs`` parallel envs."""
         del num_envs  # replay rows are flattened across envs
         return buffer_init(example_transition(), cfg.buffer_capacity)
 

@@ -27,7 +27,13 @@ from repro.systems.dial import DialConfig, make_dial
 from repro.systems.maddpg import MaddpgConfig, make_mad4pg, make_maddpg
 from repro.systems.madqn import make_madqn
 from repro.systems.offpolicy import OffPolicyConfig
-from repro.systems.onpolicy import PPOConfig, make_ippo, make_mappo
+from repro.systems.onpolicy import (
+    PPOConfig,
+    make_ippo,
+    make_mappo,
+    make_rec_ippo,
+    make_rec_mappo,
+)
 from repro.systems.qmix import make_qmix
 from repro.systems.vdn import make_vdn
 
@@ -79,6 +85,14 @@ REGISTRY: Dict[str, SystemEntry] = {
     "mappo": SystemEntry(
         make_mappo, PPOConfig,
         description="PPO with centralised critics (CTDE)",
+    ),
+    "rec_ippo": SystemEntry(
+        make_rec_ippo, PPOConfig,
+        description="recurrent IPPO (GRU memory cores, partial observability)",
+    ),
+    "rec_mappo": SystemEntry(
+        make_rec_mappo, PPOConfig,
+        description="recurrent MAPPO (GRU cores + centralised recurrent critics)",
     ),
     "dial": SystemEntry(
         make_dial, DialConfig, homogeneous_only=True,

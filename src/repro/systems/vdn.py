@@ -7,4 +7,5 @@ from repro.systems.offpolicy import OffPolicyConfig, make_offpolicy_system
 
 
 def make_vdn(env, cfg: OffPolicyConfig = OffPolicyConfig()):
+    """Build VDN: agent Q-nets under additive value decomposition."""
     return make_offpolicy_system(env, cfg, mixer=AdditiveMixing(), name="vdn")

@@ -7,14 +7,19 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.bench.schema import check_eval_schema, check_speed_schema
+from repro.bench.schema import (
+    check_eval_full_matrix,
+    check_eval_schema,
+    check_speed_full_matrix,
+    check_speed_schema,
+)
 from repro.bench.throughput import measure_seed_vectorization, to_markdown
 from repro.core.system import seed_keys, train_anakin
 from repro.envs import MatrixGame
 from repro.eval import evaluate
 from repro.eval.sweep import evaluate_on_env
 from repro.systems.offpolicy import OffPolicyConfig
-from repro.systems.onpolicy import PPOConfig, make_ippo
+from repro.systems.onpolicy import PPOConfig, make_ippo, make_rec_ippo
 from repro.systems.vdn import make_vdn
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
@@ -28,6 +33,13 @@ def _vdn():
 def _ippo():
     return make_ippo(
         MatrixGame(horizon=10), PPOConfig(rollout_len=8, epochs=2, num_minibatches=2)
+    )
+
+
+def _rec_ippo():
+    return make_rec_ippo(
+        MatrixGame(horizon=10),
+        PPOConfig(rollout_len=8, epochs=2, num_minibatches=2, hidden_sizes=(16, 16)),
     )
 
 
@@ -50,13 +62,17 @@ def test_seed_keys_split_and_stacked():
         seed_keys(stacked, 3)
 
 
-@pytest.mark.parametrize("make", [_vdn, _ippo], ids=["replay", "rollout"])
+@pytest.mark.parametrize(
+    "make", [_vdn, _ippo, _rec_ippo], ids=["replay", "rollout", "recurrent"]
+)
 def test_vmapped_seeds_bitwise_match_serial(make):
     """vmap-over-seeds training == N stacked serial runs, per-seed bitwise.
 
-    Covers both experience regimes; for the rollout system this also pins
-    the hoisted update gate to the serial cadence (train.steps must agree —
-    under a naive per-lane cond-as-select the update count would differ).
+    Covers both experience regimes plus the recurrent memory-core protocol
+    (whose carries and stored ``extras["carry_in"]`` gain a lane axis); for
+    the rollout systems this also pins the hoisted update gate to the
+    serial cadence (train.steps must agree — under a naive per-lane
+    cond-as-select the update count would differ).
     """
     system = make()
     seeds = [0, 1, 2, 3]
@@ -162,11 +178,52 @@ def test_measure_seed_vectorization_smoke():
 
 
 def test_checked_in_artifacts_conform_to_schema():
-    """The committed BENCH_* artifacts must match their documented schemas."""
+    """The committed BENCH_* artifacts must match schema *and* coverage.
+
+    The full checks additionally pin the matrix to the registry: every
+    system (including the recurrent rec_ippo/rec_mappo rows) x env cell
+    must be present in BENCH_eval.json, and the speed slice must track
+    its three families.
+    """
     with open(REPO / "BENCH_eval.json") as f:
-        assert check_eval_schema(json.load(f)) == []
+        assert check_eval_full_matrix(json.load(f)) == []
     with open(REPO / "BENCH_speed.json") as f:
-        assert check_speed_schema(json.load(f)) == []
+        assert check_speed_full_matrix(json.load(f)) == []
+
+
+def test_schema_coverage_pins_track_the_live_registries():
+    """The jax-free literal pins in bench.schema must mirror the registries.
+
+    schema.py cannot import them (the lint job file-loads it without jax),
+    so this tier-1 test is what makes the ``--full`` tripwire actually
+    trip: registering a new system/env without growing the pins (and the
+    committed artifacts) fails here.
+    """
+    from repro.bench.schema import (
+        FULL_MATRIX_ENVS,
+        FULL_MATRIX_SYSTEMS,
+        SPEED_SLICE_SYSTEMS,
+    )
+    from repro.envs import REGISTRY as ENV_REGISTRY
+    from repro.systems.registry import REGISTRY as SYS_REGISTRY
+
+    assert list(FULL_MATRIX_SYSTEMS) == sorted(SYS_REGISTRY)
+    assert list(FULL_MATRIX_ENVS) == sorted(ENV_REGISTRY)
+    assert set(SPEED_SLICE_SYSTEMS) <= set(SYS_REGISTRY)
+
+
+def test_full_matrix_pin_catches_missing_recurrent_rows():
+    """Dropping a registered system from the artifact fails the full check."""
+    with open(REPO / "BENCH_eval.json") as f:
+        doc = json.load(f)
+    del doc["systems"]["rec_ippo"]
+    errs = check_eval_full_matrix(doc)
+    assert any("rec_ippo" in e for e in errs)
+    with open(REPO / "BENCH_speed.json") as f:
+        speed = json.load(f)
+    speed["cells"] = [c for c in speed["cells"] if c["system"] != "rec_ippo"]
+    errs = check_speed_full_matrix(speed)
+    assert any("rec_ippo" in e for e in errs)
 
 
 def test_speed_schema_catches_drift():

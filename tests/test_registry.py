@@ -35,6 +35,8 @@ SYS_OVERRIDES = {
     "mad4pg": dict(buffer_capacity=64, min_replay=4, batch_size=4),
     "ippo": dict(rollout_len=4, epochs=1, num_minibatches=2),
     "mappo": dict(rollout_len=4, epochs=1, num_minibatches=2),
+    "rec_ippo": dict(rollout_len=4, epochs=1, num_minibatches=2, hidden_sizes=(16, 16)),
+    "rec_mappo": dict(rollout_len=4, epochs=1, num_minibatches=2, hidden_sizes=(16, 16)),
     "dial": dict(rollout_len=4),
     "rial": dict(rollout_len=4),
 }
