@@ -1,11 +1,15 @@
-"""Benchmark-artifact schema checks (BENCH_eval.json / BENCH_speed.json).
+"""Artifact schema checks: BENCH_eval / BENCH_speed / run records.
 
-The two artifacts are the repo's measurement contract: every speed/scale PR
-appends to them, and downstream tooling (CI assertions, plots, the README
-tables) reads them by key. These checks pin the documented schema so a PR
-that silently drops or renames a field fails CI instead of corrupting the
-trajectory. Hand-rolled (no jsonschema dependency): each checker returns a
-list of human-readable problems, empty when the document conforms.
+The benchmark artifacts are the repo's measurement contract: every
+speed/scale PR appends to them, and downstream tooling (CI assertions,
+plots, the README tables) reads them by key. These checks pin the
+documented schema so a PR that silently drops or renames a field fails CI
+instead of corrupting the trajectory.  The same discipline covers the
+``repro.obs`` telemetry artifacts: every document carries a provenance
+block (`check_provenance`) and per-run ``run.json`` records conform to
+`check_run_record` (schema in docs/OBSERVABILITY.md). Hand-rolled (no
+jsonschema dependency): each checker returns a list of human-readable
+problems, empty when the document conforms.
 """
 from __future__ import annotations
 
@@ -20,6 +24,15 @@ _RUNNER_KEYS = ("python_loop", "anakin", "shard_map")
 _SEEDVEC_KEYS = (
     "num_seeds", "serial_steps_per_sec", "vmapped_steps_per_sec", "speedup",
 )
+# the provenance block (produced by repro.obs.record.provenance) required
+# on every artifact: string fields + the device count
+_PROVENANCE_STR_KEYS = (
+    "git_sha", "jax_version", "backend", "device_kind", "timestamp",
+)
+# the required sections of a run record (repro.obs.record.RunRecord)
+_RUN_RECORD_SECTIONS = ("provenance", "config", "timing", "metrics")
+_RUN_TIMING_KEYS = ("total_seconds", "compile_seconds", "steady_seconds")
+_RUN_RETRACE_KEYS = ("jaxpr_traces", "backend_compiles", "compile_seconds")
 
 # The coverage pins for the *checked-in* artifacts (smoke runs in CI emit
 # partial slices and are validated without them). Literal copies of the
@@ -42,9 +55,77 @@ def _num(x) -> bool:
     return isinstance(x, (int, float)) and not isinstance(x, bool)
 
 
+def check_provenance(doc: Dict) -> List[str]:
+    """Problems with a document's ``provenance`` block.
+
+    Every artifact (BENCH_eval / BENCH_speed / run records) must say where
+    it came from: git sha, jax version, backend + device kind, device
+    count and a timestamp — the block `repro.obs.record.provenance`
+    emits, pinned here so artifacts can't silently drop their origin.
+    """
+    errs: List[str] = []
+    prov = doc.get("provenance")
+    if not isinstance(prov, dict):
+        return ["missing top-level 'provenance' object"]
+    for k in _PROVENANCE_STR_KEYS:
+        if not isinstance(prov.get(k), str) or not prov.get(k):
+            errs.append(f"provenance.{k} must be a non-empty string")
+    if not _num(prov.get("num_devices")):
+        errs.append("provenance.num_devices must be a number")
+    return errs
+
+
+def check_run_record(doc: Dict) -> List[str]:
+    """Problems with a ``run.json`` run record (schema in
+    docs/OBSERVABILITY.md).
+
+    Required: ``run_id``, the provenance block, a ``config`` object, a
+    ``timing`` object with the total/compile/steady wall split, and a
+    ``metrics`` object.  Optional sections are type-checked when present:
+    ``timing.phases`` (numbers), ``retrace`` (the `RetraceCounter`
+    summary) and ``profile`` (``trace_dir`` + optional roofline numbers).
+    """
+    errs: List[str] = []
+    if not isinstance(doc.get("run_id"), str) or not doc.get("run_id"):
+        errs.append("run_id must be a non-empty string")
+    for section in _RUN_RECORD_SECTIONS:
+        if not isinstance(doc.get(section), dict):
+            errs.append(f"missing section {section!r} (must be an object)")
+    if errs:
+        return errs
+    errs.extend(check_provenance(doc))
+    timing = doc["timing"]
+    for k in _RUN_TIMING_KEYS:
+        if not _num(timing.get(k)):
+            errs.append(f"timing.{k} must be a number")
+    phases = timing.get("phases")
+    if phases is not None:
+        if not isinstance(phases, dict):
+            errs.append("timing.phases must be an object")
+        else:
+            for k, v in phases.items():
+                if not _num(v):
+                    errs.append(f"timing.phases.{k} must be a number")
+    retrace = doc.get("retrace")
+    if retrace is not None:
+        for k in _RUN_RETRACE_KEYS:
+            if not _num(retrace.get(k)):
+                errs.append(f"retrace.{k} must be a number")
+    profile = doc.get("profile")
+    if profile is not None:
+        if not isinstance(profile.get("trace_dir"), str):
+            errs.append("profile.trace_dir must be a string")
+        roofline = profile.get("roofline")
+        if roofline is not None:
+            for k in ("hlo_flops", "hlo_bytes", "collective_bytes"):
+                if not _num(roofline.get(k)):
+                    errs.append(f"profile.roofline.{k} must be a number")
+    return errs
+
+
 def check_eval_schema(doc: Dict) -> List[str]:
     """Problems with a BENCH_eval.json document (schema in docs/BENCH.md)."""
-    errs: List[str] = []
+    errs: List[str] = list(check_provenance(doc))
     for k in ("seeds", "num_episodes", "num_envs", "train_iterations", "systems"):
         if k not in doc:
             errs.append(f"missing top-level key {k!r}")
@@ -91,7 +172,7 @@ def check_eval_schema(doc: Dict) -> List[str]:
 
 def check_speed_schema(doc: Dict) -> List[str]:
     """Problems with a BENCH_speed.json document (schema in docs/BENCH.md)."""
-    errs: List[str] = []
+    errs: List[str] = list(check_provenance(doc))
     cfg = doc.get("config")
     if not isinstance(cfg, dict):
         errs.append("missing top-level 'config' object")
@@ -171,14 +252,21 @@ def check_speed_full_matrix(doc: Dict) -> List[str]:
 def validate_path(path: str, full: bool = False) -> List[str]:
     """Validate one artifact file, dispatching on its contents.
 
-    ``full`` additionally enforces the checked-in coverage pins
-    (`check_eval_full_matrix` / `check_speed_full_matrix`) — used for the
-    committed artifacts, not the partial CI smoke slices.
+    Dispatch: ``run_id`` marks a run record, ``cells`` a BENCH_speed
+    document, ``systems`` a BENCH_eval document.  ``full`` additionally
+    enforces the checked-in coverage pins (`check_eval_full_matrix` /
+    `check_speed_full_matrix`) — used for the committed artifacts, not
+    the partial CI smoke slices (run records have no coverage pin).
     """
     with open(path) as f:
         doc = json.load(f)
+    if "run_id" in doc:
+        return check_run_record(doc)
     if "cells" in doc:
         return check_speed_full_matrix(doc) if full else check_speed_schema(doc)
     if "systems" in doc:
         return check_eval_full_matrix(doc) if full else check_eval_schema(doc)
-    return [f"{path}: neither a BENCH_eval (systems) nor BENCH_speed (cells) document"]
+    return [
+        f"{path}: not a run record (run_id), BENCH_eval (systems) or "
+        "BENCH_speed (cells) document"
+    ]

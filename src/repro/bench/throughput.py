@@ -34,9 +34,13 @@ from repro.core.system import (
     run_environment_loop,
 )
 from repro.launch.mesh import make_auto_mesh
+from repro.obs import ConsoleSink, provenance
 from repro.systems.offpolicy import OffPolicyConfig
 from repro.systems.onpolicy import PPOConfig
 from repro.systems.registry import REGISTRY, compatibility, make_pair
+
+# the bench harness's human-facing reporting path (see repro.obs.sinks)
+_console = ConsoleSink()
 
 # The CPU smoke operating point: small enough that per-op overhead (the
 # thing vmap-over-seeds amortises) is visible next to real compute, and the
@@ -223,6 +227,7 @@ def run_bench(
 
     overrides = system_overrides or {}
     results: Dict = {
+        "provenance": provenance(),
         "config": {
             "iterations": iterations,
             "num_envs": num_envs,
@@ -242,10 +247,10 @@ def run_bench(
             )
             results["cells"].append(cell)
             if not cell["compatible"]:
-                print(f"{sys_name:>10s} x {env_name:<18s}: skipped ({cell['reason']})")
+                _console.line(f"{sys_name:>10s} x {env_name:<18s}: skipped ({cell['reason']})")
                 continue
             sv = cell["seed_vectorization"]
-            print(
+            _console.line(
                 f"{sys_name:>10s} x {env_name:<18s}: "
                 f"loop={cell['runners']['python_loop']['steps_per_sec']:,.0f} "
                 f"anakin={cell['runners']['anakin']['steps_per_sec']:,.0f} "
@@ -259,7 +264,7 @@ def run_bench(
     md_path = str(pathlib.Path(out_path).with_suffix(".md"))
     with open(md_path, "w") as f:
         f.write(to_markdown(results))
-    print(f"wrote {out_path} and {md_path}")
+    _console.line(f"wrote {out_path} and {md_path}")
     return results
 
 

@@ -326,6 +326,33 @@ def init_system_state(
     )
 
 
+def _tap_body(iterate_fn, log_every: int, log_callback):
+    """Wrap a scan body with the in-jit telemetry tap (a pure observer).
+
+    The wrapped body is scanned over the iteration index; every
+    ``log_every`` iterations a `jax.debug.callback` ships the iteration
+    index, the trainer's update counter and the per-iteration metrics to
+    the host (``log_callback``, typically a `repro.obs.MetricTap`).  The
+    callback has no outputs, so nothing can flow back into the program —
+    taps-on and taps-off runs stay bitwise-identical (pinned in
+    tests/test_bench.py) — and the `lax.cond` keeps non-logging iterations
+    free of host traffic.
+    """
+
+    def body(carry, it):
+        st, metrics = iterate_fn(carry)
+        jax.lax.cond(
+            (it + 1) % log_every == 0,
+            lambda: jax.debug.callback(
+                log_callback, it, st.train.steps, metrics
+            ),
+            lambda: None,
+        )
+        return st, metrics
+
+    return body
+
+
 def make_anakin(
     system: System,
     num_iterations: int,
@@ -334,6 +361,8 @@ def make_anakin(
     eval_episodes: int = 32,
     eval_num_envs: Optional[int] = None,
     num_seeds: Optional[int] = None,
+    log_every: int = 0,
+    log_callback=None,
 ):
     """Build the fused Anakin program as a reusable function of ``key``.
 
@@ -341,7 +370,9 @@ def make_anakin(
     on to it amortises compilation across calls (the benchmark's serial-seed
     baseline) because the jit cache is keyed on the closure object.  The
     scanned carry is donated, so each call's SystemState buffers are reused
-    in place rather than copied.
+    in place rather than copied.  ``program.fused`` / ``program.init_fn``
+    expose the underlying jits for AOT inspection (the ``--profile``
+    roofline path lowers ``fused`` without running it).
 
     With ``num_seeds`` the whole program — init, training scan and any
     interleaved eval — is vmapped over a leading seed axis: N independent
@@ -349,14 +380,28 @@ def make_anakin(
     idiom), and every output leaf gains a leading ``(num_seeds,)`` axis.
     ``key`` may then be a single key (split per seed) or a stacked
     ``(num_seeds,)`` key batch for exact parity with serial runs.
+
+    With ``log_every > 0`` and a ``log_callback``, the scan streams
+    in-flight telemetry to the host every ``log_every`` iterations via
+    `jax.debug.callback` — live progress out of an otherwise silent jit,
+    without perturbing it (see `_tap_body`).  When off (the default) the
+    scan body is byte-for-byte the untapped program.
     """
     tenv = _training_env(system.env)
     iterate = _one_iteration if num_seeds is None else _one_iteration_seeds
+    tapping = log_every > 0 and log_callback is not None
 
-    def train_body(carry, _):
-        st = carry
-        st, metrics = iterate(system, tenv, st, st.key)
-        return st, metrics
+    def _iterate(st):
+        return iterate(system, tenv, st, st.key)
+
+    if tapping:
+        tapped = _tap_body(_iterate, log_every, log_callback)
+
+        def train_body(carry, it):
+            return tapped(carry, it)
+    else:
+        def train_body(carry, _):
+            return _iterate(carry)
 
     # a seed-batched scan stacks metrics time-major (T, S, ...); promised
     # axis order is seed-major, matching N stacked serial runs
@@ -365,7 +410,8 @@ def make_anakin(
 
     if eval_every <= 0:
         def run(st):
-            st, metrics = jax.lax.scan(train_body, st, None, length=num_iterations)
+            xs = jnp.arange(num_iterations) if tapping else None
+            st, metrics = jax.lax.scan(train_body, st, xs, length=num_iterations)
             return st, jax.tree_util.tree_map(seed_major, metrics)
     else:
         if num_iterations % eval_every:
@@ -380,8 +426,11 @@ def make_anakin(
         eval_fn = make_evaluator(system, eval_episodes, eval_num_envs or num_envs)
 
         def run(st):
-            def block(st, _):
-                st, metrics = jax.lax.scan(train_body, st, None, length=eval_every)
+            def block(st, b):
+                # global iteration indices for the tap; None leaves the
+                # untapped block scan untouched
+                xs = b * eval_every + jnp.arange(eval_every) if tapping else None
+                st, metrics = jax.lax.scan(train_body, st, xs, length=eval_every)
                 if num_seeds is None:
                     k_eval, k_next = jax.random.split(st.key)
                     ev = eval_fn(st.train, k_eval)
@@ -391,7 +440,8 @@ def make_anakin(
                     ev = jax.vmap(eval_fn)(st.train, k_eval)
                 return st._replace(key=k_next), (metrics, ev)
 
-            st, (metrics, evals) = jax.lax.scan(block, st, None, length=num_blocks)
+            bxs = jnp.arange(num_blocks) if tapping else None
+            st, (metrics, evals) = jax.lax.scan(block, st, bxs, length=num_blocks)
             # (num_blocks, eval_every, [S,] ...) -> ([S,] num_iterations, ...)
             metrics = jax.tree_util.tree_map(
                 lambda x: seed_major(
@@ -415,6 +465,9 @@ def make_anakin(
     def program(key):
         return fused(init_fn(key))
 
+    # AOT handles for observability tooling (HLO-cost summaries, traces)
+    program.fused = fused
+    program.init_fn = init_fn
     return program
 
 
@@ -447,6 +500,8 @@ def train_anakin(
     eval_episodes: int = 32,
     eval_num_envs: Optional[int] = None,
     num_seeds: Optional[int] = None,
+    log_every: int = 0,
+    log_callback=None,
 ):
     """Fused jit training: scan(num_iterations) x vmap(num_envs).
 
@@ -465,8 +520,15 @@ def train_anakin(
     gains a leading ``(num_seeds,)`` axis and per-seed lanes are the runs
     the serial path would produce from the same per-seed keys.  ``key`` may
     be a single key or a stacked ``(num_seeds,)`` batch (see `seed_keys`).
+
+    ``log_every``/``log_callback`` install the in-flight telemetry tap
+    (see `make_anakin`): metrics stream to the host mid-scan without
+    changing a single bit of the run's results.  Unlike the raw
+    `make_anakin` program, this wrapper drains the callback queue before
+    returning (``jax.debug.callback`` is async), so every due emission
+    has landed by the time the caller reads its tap.
     """
-    return make_anakin(
+    out = make_anakin(
         system,
         num_iterations,
         num_envs,
@@ -474,7 +536,13 @@ def train_anakin(
         eval_episodes=eval_episodes,
         eval_num_envs=eval_num_envs,
         num_seeds=num_seeds,
+        log_every=log_every,
+        log_callback=log_callback,
     )(key)
+    if log_every > 0 and log_callback is not None:
+        jax.block_until_ready(out)
+        jax.effects_barrier()
+    return out
 
 
 # -------------------------------------------------------- distributed runner
@@ -488,11 +556,18 @@ def make_distributed(
     axis: str = "data",
     eval_episodes: int = 0,
     eval_num_envs: Optional[int] = None,
+    log_every: int = 0,
+    log_callback=None,
 ):
     """Build the shard_map training program as a reusable function of ``key``.
 
     `train_distributed` calls it once; the benchmark holds on to it so timed
     calls hit the jit cache instead of re-tracing the SPMD program.
+
+    ``log_every``/``log_callback`` stream in-flight metrics exactly as in
+    `make_anakin`; under shard_map the callback fires per device shard, so
+    the host tap sees each executor's local metrics (callers that want one
+    line per emission should aggregate in their logger).
     """
     from jax.experimental.shard_map import shard_map
 
@@ -509,16 +584,26 @@ def make_distributed(
 
     tenv = _training_env(system.env)
 
+    tapping = log_every > 0 and log_callback is not None
+
     def per_device(dev_keys):
         k = dev_keys[0]
         st = init_system_state(system, k, num_envs_per_device, train_env=tenv)
 
-        def body(carry, _):
-            st = carry
-            st, metrics = _one_iteration(system, tenv, st, st.key)
-            return st, metrics
+        def _iterate(st):
+            return _one_iteration(system, tenv, st, st.key)
 
-        st, metrics = jax.lax.scan(body, st, None, length=num_iterations)
+        if tapping:
+            tapped = _tap_body(_iterate, log_every, log_callback)
+
+            def body(carry, it):
+                return tapped(carry, it)
+        else:
+            def body(carry, _):
+                return _iterate(carry)
+
+        xs = jnp.arange(num_iterations) if tapping else None
+        st, metrics = jax.lax.scan(body, st, xs, length=num_iterations)
         # return replicated params + per-device mean reward (rank-1 so the
         # data axis can concatenate device results)
         out = st.train.params, jax.tree_util.tree_map(
@@ -556,6 +641,8 @@ def train_distributed(
     axis: str = "data",
     eval_episodes: int = 0,
     eval_num_envs: Optional[int] = None,
+    log_every: int = 0,
+    log_callback=None,
 ):
     """shard_map over the mesh data axis: paper's num_executors scaling.
 
@@ -567,8 +654,12 @@ def train_distributed(
     greedy evaluator on the final (replicated) params inside the same SPMD
     program, and the return becomes (params, metrics, per-device mean eval
     return of shape (num_devices,)).
+
+    When the telemetry tap is installed this wrapper drains the callback
+    queue before returning (``jax.debug.callback`` is async), so every due
+    emission has landed by the time the caller reads its tap.
     """
-    return make_distributed(
+    out = make_distributed(
         system,
         num_iterations,
         num_envs_per_device,
@@ -576,4 +667,10 @@ def train_distributed(
         axis=axis,
         eval_episodes=eval_episodes,
         eval_num_envs=eval_num_envs,
+        log_every=log_every,
+        log_callback=log_callback,
     )(key)
+    if log_every > 0 and log_callback is not None:
+        jax.block_until_ready(out)
+        jax.effects_barrier()
+    return out

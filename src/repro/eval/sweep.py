@@ -30,8 +30,13 @@ from repro.core.system import train_anakin
 from repro.envs import REGISTRY as ENV_REGISTRY
 from repro.eval.evaluator import make_evaluator
 from repro.eval.stats import aggregate
+from repro.obs import ConsoleSink, provenance
 from repro.systems.registry import REGISTRY as SYS_REGISTRY
 from repro.systems.registry import compatibility, make_pair
+
+# the sweep's human-facing reporting path (one formatting pipeline for
+# every launcher — see repro.obs.sinks)
+_console = ConsoleSink()
 
 
 def evaluate_on_env(
@@ -113,6 +118,7 @@ def run_sweep(
     env_names = list(env_names) if env_names else sorted(ENV_REGISTRY)
     overrides = system_overrides or {}
     results: Dict[str, object] = {
+        "provenance": provenance(),
         "seeds": list(seeds),
         "num_episodes": num_episodes,
         "num_envs": num_envs,
@@ -127,7 +133,7 @@ def run_sweep(
             reason = compatibility(sys_name, env_name)
             if reason is not None:
                 per_env[env_name] = {"compatible": False, "reason": reason}
-                print(f"{sys_name:>10s} x {env_name:<18s}: skipped ({reason})")
+                _console.line(f"{sys_name:>10s} x {env_name:<18s}: skipped ({reason})")
                 continue
             _, system = make_pair(
                 sys_name, env_name, **overrides.get(sys_name, {})
@@ -138,7 +144,7 @@ def run_sweep(
             per_env[env_name] = cell
             agg = cell["aggregates"]
             lo, hi = agg["iqm_ci95"]
-            print(
+            _console.line(
                 f"{sys_name:>10s} x {env_name:<18s}: IQM={agg['iqm']:8.3f} "
                 f"[{lo:.3f}, {hi:.3f}]  mean={agg['mean']:8.3f}  "
                 f"{cell['steps_per_sec']:,.0f} steps/s  "
@@ -150,7 +156,7 @@ def run_sweep(
     md_path = str(pathlib.Path(out_path).with_suffix(".md"))
     with open(md_path, "w") as f:
         f.write(to_markdown(results))
-    print(f"wrote {out_path} and {md_path}")
+    _console.line(f"wrote {out_path} and {md_path}")
     return results
 
 

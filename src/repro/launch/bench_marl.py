@@ -15,9 +15,11 @@ in docs/BENCH.md, validated by ``scripts/check_bench_schema.py``).
 from __future__ import annotations
 
 import argparse
+import contextlib
 
 from repro.bench.throughput import run_bench
 from repro.envs import REGISTRY as ENVS
+from repro.obs import ConsoleSink, profile_trace
 from repro.systems.registry import REGISTRY as SYSTEMS
 
 
@@ -43,19 +45,31 @@ def main():
     p.add_argument("--loop-episodes", type=int, default=3,
                    help="episodes for the python-loop baseline timing")
     p.add_argument("--out", default="BENCH_speed.json")
+    p.add_argument(
+        "--profile", default=None, metavar="DIR",
+        help="capture a jax.profiler trace of the whole bench into DIR "
+        "(see docs/OBSERVABILITY.md on reading traces)",
+    )
     args = p.parse_args()
 
     system_names = sorted(SYSTEMS) if "all" in args.systems else args.systems
     env_names = sorted(ENVS) if "all" in args.envs else args.envs
-    run_bench(
-        system_names=system_names,
-        env_names=env_names,
-        iterations=args.iterations,
-        num_envs=args.num_envs,
-        num_seeds=args.num_seeds,
-        loop_episodes=args.loop_episodes,
-        out_path=args.out,
+    trace_ctx = (
+        profile_trace(args.profile) if args.profile
+        else contextlib.nullcontext({})
     )
+    with trace_ctx as trace_info:
+        run_bench(
+            system_names=system_names,
+            env_names=env_names,
+            iterations=args.iterations,
+            num_envs=args.num_envs,
+            num_seeds=args.num_seeds,
+            loop_episodes=args.loop_episodes,
+            out_path=args.out,
+        )
+    if args.profile:
+        ConsoleSink().write(trace_info)
 
 
 if __name__ == "__main__":

@@ -17,9 +17,11 @@ reason for the rest.
 from __future__ import annotations
 
 import argparse
+import time
 
 from repro.envs import REGISTRY as ENVS
 from repro.eval.sweep import run_sweep
+from repro.obs import ConsoleSink
 from repro.systems.registry import REGISTRY as SYSTEMS
 
 
@@ -47,6 +49,10 @@ def main():
 
     system_names = sorted(SYSTEMS) if "all" in args.systems else args.systems
     env_names = sorted(ENVS) if "all" in args.envs else args.envs
+    # all human-facing output (per-cell lines inside run_sweep and the
+    # closing summary here) flows through the one ConsoleSink path
+    console = ConsoleSink()
+    t0 = time.perf_counter()
     run_sweep(
         system_names=system_names,
         env_names=env_names,
@@ -55,6 +61,10 @@ def main():
         num_envs=args.num_envs,
         train_iterations=args.train_iterations,
         out_path=args.out,
+    )
+    console.line(
+        f"swept {len(system_names)} system(s) x {len(env_names)} env(s) in "
+        f"{time.perf_counter() - t0:.1f}s"
     )
 
 

@@ -1,0 +1,86 @@
+"""Per-phase timing from the runners' existing phase split.
+
+The fused runners already factor one training iteration into the rollout
+phase (`repro.core.system._step_phase`: act + env step + observe) and the
+update phase (`_do_updates`: the gated trainer updates) — the same split
+the seed-vmap update gate relies on.  A fused scan cannot be timed from
+the host per phase, so the run record instead carries a *micro-benchmark*
+of each phase at the run's exact operating point: each phase jitted alone
+and timed warm (best-of, compile excluded), the same discipline as
+`repro.bench.throughput`.
+
+The buffer contents never affect a phase's compute (shapes are static;
+`update` runs the same program on a fresh buffer as on a full one), so
+timing from a freshly initialised state is representative of steady state.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, Optional
+
+import jax
+
+
+def _best_of(fn, *args, repeats: int = 3) -> float:
+    """Best-of-``repeats`` seconds per warm call (first call compiles)."""
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def measure_phase_timing(
+    system,
+    num_envs: int,
+    key,
+    eval_episodes: int = 0,
+    eval_num_envs: Optional[int] = None,
+    repeats: int = 3,
+) -> Dict[str, float]:
+    """Seconds per phase for one iteration of ``system`` at ``num_envs``.
+
+    Returns ``{"rollout_seconds", "update_seconds"}`` — one `_step_phase`
+    call and one gated `_do_updates` block respectively — plus
+    ``"eval_seconds"`` (one fused evaluator call) when ``eval_episodes``
+    is set.  These are the run record's ``timing.phases`` block: the
+    honest phase-level answer to "where does an iteration go?" that the
+    ROADMAP's kernel/async work needs before attacking the slow phase.
+    """
+    from repro.core.system import (
+        _do_updates,
+        _step_phase,
+        _training_env,
+        init_system_state,
+    )
+
+    tenv = _training_env(system.env)
+    k_init, k_iter, k_upd, k_eval = jax.random.split(key, 4)
+    st = jax.jit(
+        functools.partial(
+            init_system_state, system, num_envs=num_envs, train_env=tenv
+        )
+    )(k_init)
+
+    step = jax.jit(lambda s, k: _step_phase(system, tenv, s, k)[:2])
+    update = jax.jit(
+        lambda tr, buf, k: _do_updates(system, tr, buf, k)
+    )
+
+    out: Dict[str, float] = {
+        "rollout_seconds": _best_of(step, st, k_iter, repeats=repeats),
+        "update_seconds": _best_of(
+            update, st.train, st.buffer, k_upd, repeats=repeats
+        ),
+    }
+    if eval_episodes > 0:
+        from repro.eval.evaluator import make_evaluator
+
+        eval_fn = jax.jit(
+            make_evaluator(system, eval_episodes, eval_num_envs or num_envs)
+        )
+        out["eval_seconds"] = _best_of(eval_fn, st.train, k_eval, repeats=repeats)
+    return out

@@ -1,0 +1,120 @@
+"""Structured run records under ``results/runs/<run_id>/``.
+
+A run record is the marl-jax-style per-run artifact: one directory per
+launch holding ``run.json`` (config, provenance, timing splits, final
+metrics, optional profile/roofline summaries) next to the metric stream
+(``metrics.jsonl`` / ``metrics.csv`` from the logger sinks) and any
+profiler trace.  The schema is pinned in `repro.bench.schema.
+check_run_record` and validated in CI by ``scripts/check_bench_schema.py``
+— the same discipline as the BENCH_* artifacts, so a regression report
+can always cite *what ran, where, and how long each part took*.
+
+`provenance()` is also the shared source of the provenance block the
+BENCH_eval/BENCH_speed emitters attach to their artifacts.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import subprocess
+import time
+import uuid
+from typing import Any, Dict, Mapping, Optional
+
+_REPO_ROOT = pathlib.Path(__file__).resolve().parents[3]
+
+
+def git_sha(repo_root=None) -> str:
+    """The repo's current commit sha, or ``"unknown"`` outside a checkout."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=str(repo_root or _REPO_ROOT),
+            capture_output=True,
+            text=True,
+            timeout=10,
+        )
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def provenance() -> Dict[str, Any]:
+    """Where/when/on-what a measurement ran — the reproducibility block.
+
+    Attached to every run record and (as the ``provenance`` top-level key)
+    to BENCH_eval.json / BENCH_speed.json, so any number in an artifact can
+    be traced to a commit, a jax version and a device kind.
+    """
+    import jax
+
+    dev = jax.devices()[0]
+    return {
+        "git_sha": git_sha(),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": dev.device_kind,
+        "num_devices": int(jax.local_device_count()),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+    }
+
+
+def default_run_id(tag: str = "run") -> str:
+    """A sortable, collision-safe id: ``<tag>-<utc time>-<hex>``."""
+    stamp = time.strftime("%Y%m%d-%H%M%S", time.gmtime())
+    return f"{tag}-{stamp}-{uuid.uuid4().hex[:6]}"
+
+
+class RunRecord:
+    """One launch's structured artifact directory.
+
+        record = RunRecord("results/runs", config=vars(args), tag="ippo")
+        logger = MultiLogger(ConsoleSink(),
+                             JsonlSink(record.metrics_path("jsonl")),
+                             CsvSink(record.metrics_path("csv")))
+        ... train ...
+        record.update("timing", total_seconds=wall, compile_seconds=c)
+        record.save()
+
+    The document always carries ``run_id``/``provenance``/``config``/
+    ``timing``/``metrics``; sections grow via `update` and land in
+    ``<dir>/run.json`` on `save`.
+    """
+
+    def __init__(
+        self,
+        root="results/runs",
+        run_id: Optional[str] = None,
+        config: Optional[Mapping[str, Any]] = None,
+        tag: str = "run",
+    ):
+        self.run_id = run_id or default_run_id(tag)
+        self.dir = pathlib.Path(root) / self.run_id
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.doc: Dict[str, Any] = {
+            "run_id": self.run_id,
+            "provenance": provenance(),
+            "config": dict(config or {}),
+            "timing": {},
+            "metrics": {},
+        }
+
+    @property
+    def path(self) -> pathlib.Path:
+        """Where `save` writes the record document."""
+        return self.dir / "run.json"
+
+    def metrics_path(self, fmt: str) -> pathlib.Path:
+        """The conventional location of the ``fmt`` metric stream."""
+        return self.dir / f"metrics.{fmt}"
+
+    def update(self, section: str, **fields: Any) -> None:
+        """Merge ``fields`` into a (possibly new) top-level dict section."""
+        self.doc.setdefault(section, {}).update(fields)
+
+    def save(self) -> pathlib.Path:
+        """Write ``run.json`` (the schema-checked document) and return it."""
+        with open(self.path, "w") as f:
+            json.dump(self.doc, f, indent=2, default=str)
+        return self.path

@@ -1,0 +1,184 @@
+"""The logger multiplexer: one ``Logger`` protocol, many sinks.
+
+Telemetry producers (the in-jit metric tap, the launchers, the bench
+harnesses) write dict-shaped metric rows through a single ``Logger``
+interface; where those rows end up — terminal, ``metrics.jsonl``,
+``metrics.csv``, several at once — is a composition decision made at
+launch time, exactly the Mava logger-stack idiom:
+
+    logger = MultiLogger(ConsoleSink(), JsonlSink(p), CsvSink(p2))
+    logger.write({"episode_return": 1.5, "sps": 80_000}, step=128)
+
+`SeedAggregator` wraps any sink for seed-vectorized runs: metric values
+arriving with a leading ``(num_seeds,)`` lane axis are reduced to
+mean / min / max columns before being forwarded, so a vmapped 8-seed run
+logs one human-readable row per tap instead of eight.
+
+Sinks are pure observers of host-side values: they never touch traced
+arrays (the tap converts via `jax.debug.callback` first) and never feed
+anything back into the computation.
+"""
+from __future__ import annotations
+
+import csv
+import json
+import sys
+from typing import Any, Dict, Mapping, Optional, Protocol, Sequence
+
+import numpy as np
+
+
+def to_python(value: Any) -> Any:
+    """A JSON/CSV-serialisable python value from any scalar/array leaf."""
+    if isinstance(value, (bool, int, float, str)) or value is None:
+        return value
+    arr = np.asarray(value)
+    if arr.ndim == 0:
+        if arr.dtype == np.bool_:
+            return bool(arr)
+        if np.issubdtype(arr.dtype, np.integer):
+            return int(arr)
+        return float(arr)
+    return arr.tolist()
+
+
+class Logger(Protocol):
+    """The sink interface every telemetry consumer implements."""
+
+    def write(self, metrics: Mapping[str, Any], step: Optional[int] = None) -> None:
+        """Record one row of named metric values (``step`` orders rows)."""
+        ...
+
+    def close(self) -> None:
+        """Flush and release any underlying resource (idempotent)."""
+        ...
+
+
+class ConsoleSink:
+    """Human-facing terminal sink — the single formatting path for stdout.
+
+    ``write`` renders a metric row as aligned ``key=value`` pairs;
+    ``line`` emits free-form text through the same prefix, so launcher
+    reporting and streamed telemetry look like one program talking.
+    """
+
+    def __init__(self, stream=None, prefix: str = ""):
+        self._stream = stream if stream is not None else sys.stdout
+        self.prefix = prefix
+
+    @staticmethod
+    def _fmt(value: Any) -> str:
+        value = to_python(value)
+        if isinstance(value, float):
+            return f"{value:,.4g}"
+        if isinstance(value, list):
+            return np.array2string(np.asarray(value), precision=3)
+        return str(value)
+
+    def write(self, metrics: Mapping[str, Any], step: Optional[int] = None) -> None:
+        parts = [] if step is None else [f"step={step}"]
+        parts += [f"{k}={self._fmt(v)}" for k, v in metrics.items()]
+        self.line("  ".join(parts))
+
+    def line(self, text: str) -> None:
+        """Free-form console output (the launchers' former ``print`` path)."""
+        print(f"{self.prefix}{text}", file=self._stream, flush=True)
+
+    def close(self) -> None:
+        """Nothing to release — the stream is borrowed, not owned."""
+
+
+class JsonlSink:
+    """One JSON object per row, appended to ``path`` (machine-readable)."""
+
+    def __init__(self, path):
+        self.path = path
+        self._f = open(path, "a")
+
+    def write(self, metrics: Mapping[str, Any], step: Optional[int] = None) -> None:
+        row: Dict[str, Any] = {} if step is None else {"step": int(step)}
+        row.update({k: to_python(v) for k, v in metrics.items()})
+        self._f.write(json.dumps(row) + "\n")
+        self._f.flush()
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+
+class CsvSink:
+    """A rectangular CSV of the metric stream.
+
+    The header is pinned by the first row written; later rows may omit
+    columns (logged empty) but introducing a *new* key is an error — a
+    telemetry stream with a drifting schema is a bug at the producer, and
+    failing loudly here beats silently dropping the column.
+    """
+
+    def __init__(self, path):
+        self.path = path
+        self._f = open(path, "a", newline="")
+        self._writer: Optional[csv.DictWriter] = None
+
+    def write(self, metrics: Mapping[str, Any], step: Optional[int] = None) -> None:
+        row: Dict[str, Any] = {} if step is None else {"step": int(step)}
+        row.update({k: to_python(v) for k, v in metrics.items()})
+        if self._writer is None:
+            self._writer = csv.DictWriter(self._f, fieldnames=list(row))
+            self._writer.writeheader()
+        unknown = set(row) - set(self._writer.fieldnames)
+        if unknown:
+            raise ValueError(
+                f"CsvSink: keys {sorted(unknown)} not in the header pinned by "
+                f"the first row {self._writer.fieldnames}"
+            )
+        self._writer.writerow(row)
+        self._f.flush()
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+
+class MultiLogger:
+    """Fan one ``write`` out to several sinks (the multiplexer itself)."""
+
+    def __init__(self, *sinks: Logger):
+        self.sinks: Sequence[Logger] = tuple(sinks)
+
+    def write(self, metrics: Mapping[str, Any], step: Optional[int] = None) -> None:
+        for s in self.sinks:
+            s.write(metrics, step=step)
+
+    def close(self) -> None:
+        for s in self.sinks:
+            s.close()
+
+
+class SeedAggregator:
+    """Reduce seed-vectorized metric lanes before they reach a sink.
+
+    Values with a leading ``(num_seeds,)`` axis become three columns —
+    ``k`` (mean over lanes), ``k/min`` and ``k/max`` — so a vmapped
+    multi-seed run streams one row per tap. Scalars pass through
+    untouched, which keeps the wrapper safe to leave on for serial runs.
+    """
+
+    def __init__(self, inner: Logger):
+        self.inner = inner
+
+    def write(self, metrics: Mapping[str, Any], step: Optional[int] = None) -> None:
+        out: Dict[str, Any] = {}
+        for k, v in metrics.items():
+            arr = np.asarray(v)
+            if arr.ndim == 0 or isinstance(v, (str, bool)):
+                out[k] = v
+                continue
+            lanes = arr.reshape(arr.shape[0], -1).mean(axis=1)
+            out[k] = float(lanes.mean())
+            out[f"{k}/min"] = float(lanes.min())
+            out[f"{k}/max"] = float(lanes.max())
+        self.inner.write(out, step=step)
+
+    def close(self) -> None:
+        self.inner.close()

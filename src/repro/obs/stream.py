@@ -1,0 +1,78 @@
+"""In-flight metric streaming out of a fused training jit.
+
+A fused anakin/shard_map run is one `lax.scan` under one jit: without a
+tap it is silent until the final iteration returns, which for a long run
+means hours of "is it even training?".  `MetricTap` is the *host* half of
+the telemetry tap: the runners call it from inside the scan through
+``jax.debug.callback`` every ``log_every`` iterations (see
+``make_anakin(..., log_every=, log_callback=)``), and it turns the raw
+per-iteration metrics into logger rows with live steps-per-second and
+trainer update counts.
+
+The hard invariant — taps are *pure observers* — is structural:
+`jax.debug.callback` has no outputs, so nothing the host does can flow
+back into the computation, and the runners only add the callback (under a
+`lax.cond` on the iteration index) when a tap is installed, leaving the
+taps-off program untouched.  ``tests/test_bench.py`` pins taps-on vs
+taps-off runs bitwise-identical.
+
+SPS is wall-clock from tap construction, so the first row absorbs
+compilation (it is *live* telemetry, not a benchmark — `repro.bench`
+owns compile-excluded numbers); later rows approach steady state.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Mapping, Optional
+
+import numpy as np
+
+from repro.obs.sinks import Logger
+
+
+class MetricTap:
+    """Host-side receiver for in-jit metric emissions.
+
+    Args:
+      logger: any `repro.obs.sinks.Logger` (wrap in `SeedAggregator` for
+        seed-vectorized runs so lane axes collapse to mean/min/max).
+      log_every: the emission period the runner was configured with —
+        recorded so rows can report their iteration index.
+      steps_per_iteration: environment steps one scan iteration advances
+        (num_envs x num_seeds x num_devices), for the live SPS column.
+    """
+
+    def __init__(
+        self, logger: Logger, log_every: int, steps_per_iteration: int
+    ):
+        if log_every <= 0:
+            raise ValueError(f"log_every must be positive, got {log_every}")
+        self.logger = logger
+        self.log_every = log_every
+        self.steps_per_iteration = steps_per_iteration
+        self.emits = 0
+        self._t0: Optional[float] = None
+        self.reset_clock()
+
+    def reset_clock(self) -> None:
+        """Restart the SPS wall-clock (call right before launching the jit)."""
+        self._t0 = time.perf_counter()
+
+    def __call__(self, iteration, updates, metrics: Mapping[str, Any]) -> None:
+        """The `jax.debug.callback` target: one emission from inside the scan.
+
+        ``iteration`` is the 0-based scan index, ``updates`` the trainer's
+        update counter (possibly a ``(num_seeds,)`` lane batch — forwarded
+        as-is so the logger's aggregation policy decides), ``metrics`` the
+        runner's per-iteration metric dict for this iteration.
+        """
+        it = int(np.asarray(iteration))
+        elapsed = max(time.perf_counter() - self._t0, 1e-9)
+        row = {
+            "iteration": it + 1,
+            "updates": updates,
+            "sps": (it + 1) * self.steps_per_iteration / elapsed,
+        }
+        row.update(metrics)
+        self.emits += 1
+        self.logger.write(row, step=it + 1)

@@ -250,3 +250,83 @@ def test_eval_schema_catches_drift():
     errs = check_eval_schema(doc)
     assert any("returns" in e for e in errs)
     assert any("iqm_ci95" in e for e in errs)
+
+
+# ------------------------------------------------------- telemetry parity
+
+
+def _all_leaves(st, metrics):
+    return jax.tree_util.tree_leaves((st.train, metrics))
+
+
+@pytest.mark.parametrize(
+    "make", [_vdn, _ippo], ids=["replay", "rollout"]
+)
+def test_tapped_run_bitwise_matches_untapped(make):
+    """The acceptance pin: a tapped fused run streams >= 2 in-flight rows
+    AND is bitwise-identical (params + metrics) to the taps-off run."""
+    system = make()
+    emitted = []
+
+    def tap(iteration, updates, metrics):
+        emitted.append(int(np.asarray(iteration)))
+
+    st_off, m_off = train_anakin(system, jax.random.key(7), 64, num_envs=4)
+    st_on, m_on = train_anakin(
+        system, jax.random.key(7), 64, num_envs=4,
+        log_every=16, log_callback=tap,
+    )
+    assert emitted == [15, 31, 47, 63]  # >= 2 lines, mid-scan
+    for a, b in zip(_all_leaves(st_off, m_off), _all_leaves(st_on, m_on)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_tapped_seed_vmap_bitwise_matches_untapped():
+    """Taps stay pure observers under the seed-vmap runner too."""
+    system = _vdn()
+    keys = jnp.stack([jax.random.key(s) for s in (0, 1, 2)])
+    tapped = []
+    st_off, m_off = train_anakin(system, keys, 40, num_envs=4, num_seeds=3)
+    st_on, m_on = train_anakin(
+        system, keys, 40, num_envs=4, num_seeds=3,
+        log_every=20, log_callback=lambda it, u, m: tapped.append(m),
+    )
+    assert len(tapped) == 2
+    assert np.asarray(tapped[0]["reward"]).shape == (3,)  # lane axis intact
+    for a, b in zip(_all_leaves(st_off, m_off), _all_leaves(st_on, m_on)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_tapped_eval_run_bitwise_matches_untapped():
+    """The eval-interleaved (blocked-scan) path honours the same invariant."""
+    system = _vdn()
+    off = train_anakin(
+        system, jax.random.key(2), 40, num_envs=4,
+        eval_every=20, eval_episodes=4, eval_num_envs=4,
+    )
+    hits = []
+    on = train_anakin(
+        system, jax.random.key(2), 40, num_envs=4,
+        eval_every=20, eval_episodes=4, eval_num_envs=4,
+        log_every=10, log_callback=lambda it, u, m: hits.append(int(np.asarray(it))),
+    )
+    assert hits == [9, 19, 29, 39]  # global iteration index across blocks
+    for a, b in zip(
+        jax.tree_util.tree_leaves((off[0].train, off[1], off[2])),
+        jax.tree_util.tree_leaves((on[0].train, on[1], on[2])),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bench_schemas_require_provenance():
+    """Artifacts without (or with a gutted) provenance block now fail."""
+    with open(REPO / "BENCH_speed.json") as f:
+        speed = json.load(f)
+    with open(REPO / "BENCH_eval.json") as f:
+        ev = json.load(f)
+    assert {"git_sha", "jax_version", "backend", "device_kind",
+            "num_devices", "timestamp"} <= set(speed["provenance"])
+    speed.pop("provenance")
+    assert any("provenance" in e for e in check_speed_schema(speed))
+    ev["provenance"]["jax_version"] = ""
+    assert any("jax_version" in e for e in check_eval_schema(ev))

@@ -1,0 +1,297 @@
+"""repro.obs: sinks, streaming tap, run records, profiler hooks."""
+import csv
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.bench.schema import check_provenance, check_run_record
+from repro.core.system import train_anakin
+from repro.envs import MatrixGame
+from repro.obs import (
+    ConsoleSink,
+    CsvSink,
+    JsonlSink,
+    MetricTap,
+    MultiLogger,
+    RetraceCounter,
+    RunRecord,
+    SeedAggregator,
+    measure_phase_timing,
+    profile_trace,
+    provenance,
+    roofline_summary,
+)
+from repro.systems.offpolicy import OffPolicyConfig
+from repro.systems.vdn import make_vdn
+
+CFG = OffPolicyConfig(buffer_capacity=500, min_replay=50, batch_size=16)
+
+
+def _vdn():
+    return make_vdn(MatrixGame(horizon=10), CFG)
+
+
+class CaptureSink:
+    """A test double recording every (metrics, step) write."""
+
+    def __init__(self):
+        self.rows = []
+        self.closed = False
+
+    def write(self, metrics, step=None):
+        self.rows.append((dict(metrics), step))
+
+    def close(self):
+        self.closed = True
+
+
+# ------------------------------------------------------------------- sinks
+
+
+def test_jsonl_sink_round_trips(tmp_path):
+    path = tmp_path / "metrics.jsonl"
+    sink = JsonlSink(path)
+    rows = [
+        {"reward": 1.5, "sps": 1000.0, "updates": 3},
+        {"reward": np.float32(-2.25), "sps": jnp.asarray(2000.0), "updates": 4},
+    ]
+    for i, row in enumerate(rows):
+        sink.write(row, step=i)
+    sink.close()
+    back = [json.loads(line) for line in path.read_text().splitlines()]
+    assert back == [
+        {"step": 0, "reward": 1.5, "sps": 1000.0, "updates": 3},
+        {"step": 1, "reward": -2.25, "sps": 2000.0, "updates": 4},
+    ]
+
+
+def test_csv_sink_round_trips(tmp_path):
+    path = tmp_path / "metrics.csv"
+    sink = CsvSink(path)
+    sink.write({"reward": 1.5, "updates": 3}, step=10)
+    sink.write({"reward": -0.5, "updates": 4}, step=20)
+    sink.close()
+    with open(path) as f:
+        back = list(csv.DictReader(f))
+    assert [r["step"] for r in back] == ["10", "20"]
+    assert [float(r["reward"]) for r in back] == [1.5, -0.5]
+    assert [int(r["updates"]) for r in back] == [3, 4]
+
+
+def test_csv_sink_rejects_schema_drift(tmp_path):
+    sink = CsvSink(tmp_path / "m.csv")
+    sink.write({"a": 1.0}, step=0)
+    sink.write({}, step=1)  # missing columns are fine (logged empty)
+    with pytest.raises(ValueError, match="not in the header"):
+        sink.write({"a": 1.0, "surprise": 2.0}, step=2)
+    sink.close()
+
+
+def test_console_sink_single_formatting_path(capsys):
+    console = ConsoleSink()
+    console.write({"reward": 1.23456, "updates": 7}, step=5)
+    console.line("free-form report")
+    out = capsys.readouterr().out.splitlines()
+    assert out[0] == "step=5  reward=1.235  updates=7"
+    assert out[1] == "free-form report"
+
+
+def test_multi_logger_fans_out_and_closes():
+    a, b = CaptureSink(), CaptureSink()
+    logger = MultiLogger(a, b)
+    logger.write({"x": 1}, step=0)
+    logger.close()
+    assert a.rows == b.rows == [({"x": 1}, 0)]
+    assert a.closed and b.closed
+
+
+def test_seed_aggregator_reduces_lane_axes():
+    inner = CaptureSink()
+    logger = SeedAggregator(inner)
+    logger.write(
+        {"reward": np.array([1.0, 3.0, 5.0]), "iteration": 7, "tag": "x"},
+        step=7,
+    )
+    (row, step), = inner.rows
+    assert step == 7
+    assert row["reward"] == pytest.approx(3.0)       # mean over lanes
+    assert row["reward/min"] == pytest.approx(1.0)
+    assert row["reward/max"] == pytest.approx(5.0)
+    assert row["iteration"] == 7 and row["tag"] == "x"  # scalars untouched
+
+
+def test_seed_aggregator_means_trailing_dims_within_lane():
+    inner = CaptureSink()
+    SeedAggregator(inner).write({"m": np.arange(6.0).reshape(2, 3)})
+    (row, _), = inner.rows
+    assert row["m"] == pytest.approx(2.5)
+    assert row["m/min"] == pytest.approx(1.0)  # lane 0 mean
+    assert row["m/max"] == pytest.approx(4.0)  # lane 1 mean
+
+
+# ----------------------------------------------------------- streaming tap
+
+
+def test_metric_tap_counts_and_reports_sps():
+    sink = CaptureSink()
+    tap = MetricTap(sink, log_every=8, steps_per_iteration=4)
+    tap(7, 2, {"reward": 0.5})
+    tap(np.int32(15), 4, {"reward": 1.5})
+    assert tap.emits == 2
+    (r0, s0), (r1, s1) = sink.rows
+    assert (s0, s1) == (8, 16)
+    assert r0["iteration"] == 8 and r1["iteration"] == 16
+    assert r0["sps"] > 0 and r1["sps"] > 0
+    assert r1["updates"] == 4 and r1["reward"] == 1.5
+
+
+def test_metric_tap_rejects_nonpositive_period():
+    with pytest.raises(ValueError, match="log_every"):
+        MetricTap(CaptureSink(), log_every=0, steps_per_iteration=1)
+
+
+def test_train_anakin_streams_inflight_metrics():
+    """A fused run with log_every set emits rows *during* the scan."""
+    sink = CaptureSink()
+    tap = MetricTap(sink, log_every=16, steps_per_iteration=4)
+    train_anakin(
+        _vdn(), jax.random.key(0), 64, num_envs=4,
+        log_every=16, log_callback=tap,
+    )
+    assert tap.emits == 4  # >= 2 in-flight lines is the acceptance bar
+    steps = [s for _, s in sink.rows]
+    assert steps == [16, 32, 48, 64]
+    for row, _ in sink.rows:
+        assert {"iteration", "updates", "sps", "reward"} <= set(row)
+
+
+def test_train_anakin_tap_covers_seed_vmap_lanes():
+    sink = CaptureSink()
+    tap = MetricTap(SeedAggregator(sink), log_every=10, steps_per_iteration=8)
+    keys = jnp.stack([jax.random.key(s) for s in (0, 1)])
+    train_anakin(
+        _vdn(), keys, 20, num_envs=4, num_seeds=2,
+        log_every=10, log_callback=tap,
+    )
+    assert tap.emits == 2
+    for row, _ in sink.rows:
+        assert "reward/min" in row and "reward/max" in row
+
+
+# ------------------------------------------------------------- run records
+
+
+def test_provenance_block_conforms():
+    assert check_provenance({"provenance": provenance()}) == []
+
+
+def test_run_record_schema_round_trip(tmp_path):
+    record = RunRecord(tmp_path, config={"system": "vdn"}, tag="vdn-test")
+    record.update(
+        "timing", total_seconds=1.5, compile_seconds=1.0, steady_seconds=0.5
+    )
+    record.update("timing", phases={"rollout_seconds": 0.1})
+    record.update("retrace", jaxpr_traces=3, backend_compiles=1,
+                  compile_seconds=1.0)
+    record.update("metrics", reward_last10pct=0.25)
+    path = record.save()
+    with open(path) as f:
+        doc = json.load(f)
+    assert check_run_record(doc) == []
+    assert doc["config"] == {"system": "vdn"}
+    assert doc["run_id"].startswith("vdn-test-")
+    assert record.metrics_path("jsonl").parent == record.dir
+
+
+def test_run_record_schema_catches_drift(tmp_path):
+    record = RunRecord(tmp_path, tag="t")
+    record.update(
+        "timing", total_seconds=1.0, compile_seconds=0.5, steady_seconds=0.5
+    )
+    with open(record.save()) as f:
+        doc = json.load(f)
+    doc["timing"].pop("compile_seconds")
+    doc["provenance"].pop("git_sha")
+    doc["profile"] = {"trace_dir": 3}
+    errs = check_run_record(doc)
+    assert any("compile_seconds" in e for e in errs)
+    assert any("git_sha" in e for e in errs)
+    assert any("trace_dir" in e for e in errs)
+    assert check_run_record({"run_id": ""})  # everything missing
+
+
+def test_check_bench_schema_script_validates_run_records(tmp_path):
+    """scripts/check_bench_schema.py dispatches run.json by its run_id key."""
+    import importlib.util
+    import pathlib
+
+    script = (
+        pathlib.Path(__file__).resolve().parent.parent
+        / "scripts" / "check_bench_schema.py"
+    )
+    spec = importlib.util.spec_from_file_location("cbs", script)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+
+    record = RunRecord(tmp_path, tag="ok")
+    record.update(
+        "timing", total_seconds=1.0, compile_seconds=0.5, steady_seconds=0.5
+    )
+    path = record.save()
+    assert mod.main([str(path)]) == 0
+    record.doc["timing"].pop("total_seconds")
+    record.save()
+    assert mod.main([str(path)]) == 1
+
+
+# ---------------------------------------------------------- profiler hooks
+
+
+def test_retrace_counter_sees_fresh_compiles():
+    with RetraceCounter() as rc:
+        jax.jit(lambda x: x * 2.0 + 1.0)(jnp.ones((3,)))
+    assert rc.jaxpr_traces >= 1
+    assert rc.backend_compiles >= 1
+    assert rc.compile_seconds > 0
+    summary = rc.summary()
+    assert set(summary) == {"jaxpr_traces", "backend_compiles", "compile_seconds"}
+    # cached second call: no new compiles inside a fresh region
+    fn = jax.jit(lambda x: x - 1.0)
+    fn(jnp.ones((2,)))
+    with RetraceCounter() as rc2:
+        fn(jnp.ones((2,)))
+    assert rc2.backend_compiles == 0
+
+
+def test_profile_trace_writes_directory(tmp_path):
+    with profile_trace(tmp_path / "trace") as info:
+        jax.block_until_ready(jnp.ones((8, 8)) @ jnp.ones((8, 8)))
+    assert (tmp_path / "trace").is_dir()
+    assert info["trace_dir"] == str(tmp_path / "trace")
+
+
+def test_roofline_summary_counts_scanned_flops():
+    def body(c, _):
+        return c @ jnp.ones((8, 8)), None
+
+    def fn(x):
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out
+
+    text = jax.jit(fn).lower(jnp.ones((8, 8))).compile().as_text()
+    summary = roofline_summary(text)
+    # 10 trips x (2 * 8^3) flops — trip-count awareness is the point
+    assert summary["hlo_flops"] == pytest.approx(10 * 2 * 8**3)
+    assert summary["hlo_bytes"] > 0
+
+
+def test_measure_phase_timing_smoke():
+    phases = measure_phase_timing(
+        _vdn(), num_envs=2, key=jax.random.key(0), eval_episodes=2,
+        repeats=1,
+    )
+    assert set(phases) == {"rollout_seconds", "update_seconds", "eval_seconds"}
+    assert all(v > 0 for v in phases.values())
