@@ -1,4 +1,4 @@
-"""Artifact schema checks: BENCH_eval / BENCH_speed / run records.
+"""Artifact schema checks: BENCH_eval / BENCH_speed / BENCH_serve / run records.
 
 The benchmark artifacts are the repo's measurement contract: every
 speed/scale PR appends to them, and downstream tooling (CI assertions,
@@ -49,6 +49,16 @@ FULL_MATRIX_ENVS = (
     "speaker_listener", "spread", "switch_game",
 )
 SPEED_SLICE_SYSTEMS = ("vdn", "ippo", "rec_ippo")
+# BENCH_serve's checked-in coverage: a feed-forward and a recurrent system
+# must each be served at >= MIN_SERVE_SLOT_COUNTS distinct slot-pool sizes
+# (the artifact's whole point is latency/throughput *vs slot count*)
+SERVE_SLICE_SYSTEMS = ("ippo", "rec_ippo")
+MIN_SERVE_SLOT_COUNTS = 2
+_SERVE_CONFIG_NUM_KEYS = (
+    "streams", "episodes_per_stream", "arrival_rate", "seed",
+)
+_SERVE_LATENCY_KEYS = ("p50_ms", "p99_ms", "mean_ms")
+_SERVE_CELL_NUM_KEYS = ("ticks", "decisions", "episodes", "wall_seconds")
 
 
 def _num(x) -> bool:
@@ -210,6 +220,90 @@ def check_speed_schema(doc: Dict) -> List[str]:
     return errs
 
 
+def check_serve_schema(doc: Dict) -> List[str]:
+    """Problems with a BENCH_serve.json document (schema in docs/BENCH.md).
+
+    A serving artifact declares itself with ``"workload": "serve"`` and
+    carries the provenance block, the traffic config (streams, episodes
+    per stream, arrival rate, seed, mode) and one cell per
+    (checkpoint, slot count) pair: per-decision latency percentiles,
+    decisions/sec and episode counts for a restored policy served behind
+    a `repro.serve.DecisionEngine` slot pool.
+    """
+    errs: List[str] = list(check_provenance(doc))
+    if doc.get("workload") != "serve":
+        errs.append("'workload' must be the string 'serve'")
+    cfg = doc.get("config")
+    if not isinstance(cfg, dict):
+        errs.append("missing top-level 'config' object")
+    else:
+        for k in _SERVE_CONFIG_NUM_KEYS:
+            if not _num(cfg.get(k)):
+                errs.append(f"config.{k} must be a number")
+        if cfg.get("mode") not in ("greedy", "sample"):
+            errs.append("config.mode must be 'greedy' or 'sample'")
+    cells = doc.get("cells")
+    if not isinstance(cells, list) or not cells:
+        errs.append("'cells' must be a non-empty list")
+        return errs
+    for i, cell in enumerate(cells):
+        where = f"cells[{i}]"
+        for k in ("system", "env", "checkpoint"):
+            if not isinstance(cell.get(k), str) or not cell.get(k):
+                errs.append(f"{where}.{k} must be a non-empty string")
+        if not _num(cell.get("max_slots")) or cell.get("max_slots", 0) < 1:
+            errs.append(f"{where}.max_slots must be a number >= 1")
+        for k in _SERVE_CELL_NUM_KEYS:
+            if not _num(cell.get(k)):
+                errs.append(f"{where}.{k} must be a number")
+        if not _num(cell.get("decisions_per_sec")) or cell.get(
+            "decisions_per_sec", 0
+        ) <= 0:
+            errs.append(f"{where}.decisions_per_sec must be > 0")
+        if not _num(cell.get("episode_return_mean")):
+            errs.append(f"{where}.episode_return_mean must be a number")
+        lat = cell.get("latency")
+        if not isinstance(lat, dict):
+            errs.append(f"{where}.latency must be an object")
+            continue
+        for k in _SERVE_LATENCY_KEYS:
+            if not _num(lat.get(k)) or lat.get(k, 0) <= 0:
+                errs.append(f"{where}.latency.{k} must be > 0")
+        if (
+            _num(lat.get("p50_ms"))
+            and _num(lat.get("p99_ms"))
+            and lat["p99_ms"] < lat["p50_ms"]
+        ):
+            errs.append(f"{where}.latency.p99_ms must be >= p50_ms")
+    return errs
+
+
+def check_serve_slice(doc: Dict) -> List[str]:
+    """Schema plus coverage of the checked-in serving slice.
+
+    The committed ``BENCH_serve.json`` must serve a feed-forward and a
+    recurrent system (`SERVE_SLICE_SYSTEMS`) at `MIN_SERVE_SLOT_COUNTS`+
+    distinct slot counts each — the two axes the subsystem exists to
+    measure.  CI smoke runs validate with `check_serve_schema` alone.
+    """
+    errs = check_serve_schema(doc)
+    cells = doc.get("cells")
+    if not isinstance(cells, list):
+        return errs
+    for s in SERVE_SLICE_SYSTEMS:
+        slot_counts = {
+            c.get("max_slots") for c in cells
+            if isinstance(c, dict) and c.get("system") == s
+        }
+        if len(slot_counts) < MIN_SERVE_SLOT_COUNTS:
+            errs.append(
+                f"serve slice needs system {s!r} at >= "
+                f"{MIN_SERVE_SLOT_COUNTS} slot counts (got "
+                f"{sorted(slot_counts, key=str)})"
+            )
+    return errs
+
+
 def check_eval_full_matrix(doc: Dict) -> List[str]:
     """Schema plus coverage: every registered (system, env) cell present.
 
@@ -252,21 +346,24 @@ def check_speed_full_matrix(doc: Dict) -> List[str]:
 def validate_path(path: str, full: bool = False) -> List[str]:
     """Validate one artifact file, dispatching on its contents.
 
-    Dispatch: ``run_id`` marks a run record, ``cells`` a BENCH_speed
-    document, ``systems`` a BENCH_eval document.  ``full`` additionally
-    enforces the checked-in coverage pins (`check_eval_full_matrix` /
-    `check_speed_full_matrix`) — used for the committed artifacts, not
-    the partial CI smoke slices (run records have no coverage pin).
+    Dispatch: ``run_id`` marks a run record, ``workload: "serve"`` a
+    BENCH_serve document, ``cells`` a BENCH_speed document, ``systems`` a
+    BENCH_eval document.  ``full`` additionally enforces the checked-in
+    coverage pins (`check_eval_full_matrix` / `check_speed_full_matrix` /
+    `check_serve_slice`) — used for the committed artifacts, not the
+    partial CI smoke slices (run records have no coverage pin).
     """
     with open(path) as f:
         doc = json.load(f)
     if "run_id" in doc:
         return check_run_record(doc)
+    if doc.get("workload") == "serve":
+        return check_serve_slice(doc) if full else check_serve_schema(doc)
     if "cells" in doc:
         return check_speed_full_matrix(doc) if full else check_speed_schema(doc)
     if "systems" in doc:
         return check_eval_full_matrix(doc) if full else check_eval_schema(doc)
     return [
-        f"{path}: not a run record (run_id), BENCH_eval (systems) or "
-        "BENCH_speed (cells) document"
+        f"{path}: not a run record (run_id), BENCH_serve (workload), "
+        "BENCH_eval (systems) or BENCH_speed (cells) document"
     ]

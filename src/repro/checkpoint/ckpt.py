@@ -24,11 +24,20 @@ def jnp_cast(val, dtype):
     return jnp.asarray(val).astype(dtype)
 
 
+def _is_typed_key(leaf) -> bool:
+    """True for jax typed PRNG key arrays (key<fry> etc.)."""
+    return hasattr(leaf, "dtype") and jax.dtypes.issubdtype(
+        leaf.dtype, jax.dtypes.prng_key
+    )
+
+
 def _flatten_with_paths(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in flat:
         key = _SEP.join(_path_str(p) for p in path)
+        if _is_typed_key(leaf):  # typed PRNG keys save as raw key data
+            leaf = jax.random.key_data(leaf)
         arr = np.asarray(jax.device_get(leaf))
         if arr.dtype.name == "bfloat16":  # npz/numpy can't cast bf16; widen
             arr = arr.astype(np.float32)
@@ -78,6 +87,13 @@ def restore_checkpoint(directory: str, step: int, target_tree):
         if key not in data:
             raise KeyError(f"checkpoint missing key {key!r}")
         val = data[key]
+        if _is_typed_key(leaf):
+            # rewrap raw key data into the target's typed-key impl (the
+            # one leaf kind that restores as a jax array, not numpy)
+            leaves.append(
+                jax.random.wrap_key_data(val, impl=jax.random.key_impl(leaf))
+            )
+            continue
         if hasattr(leaf, "dtype") and val.dtype != leaf.dtype:
             # cast through jnp (numpy has no bf16 cast kernel)
             val = np.asarray(jax.device_get(jnp_cast(val, leaf.dtype)))

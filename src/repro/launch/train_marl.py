@@ -107,6 +107,13 @@ def parse_args(argv=None):
         help="capture a jax.profiler trace directory and attach a "
         "repro.roofline HLO-cost summary to the run record",
     )
+    p.add_argument(
+        "--save-checkpoint", default=None, metavar="DIR",
+        help="write the final trained policy as a self-describing "
+        "checkpoint directory (system/env/config + params via "
+        "repro.checkpoint; per-seed lanes when --num-seeds > 1) that "
+        "repro.serve can restore — see docs/SERVING.md",
+    )
     return p.parse_args(argv)
 
 
@@ -153,8 +160,9 @@ def run(args) -> None:
     with RetraceCounter() as rc:
         t0 = time.perf_counter()
         with trace_ctx as trace_info:
+            final_train = None  # the trained policy --save-checkpoint persists
             if args.runner == "loop":
-                _, _, ev = run_environment_loop(
+                final_train, _, ev = run_environment_loop(
                     system, key, num_episodes=args.iterations
                 )
                 returns = ev.episode_return
@@ -192,6 +200,7 @@ def run(args) -> None:
                     final_metrics["eval_returns"] = ev_returns.tolist()
                 else:
                     st, metrics = out
+                final_train = st.train
                 r = np.asarray(metrics["reward"])
                 k = max(r.shape[-1] // 10, 1)
                 final_metrics["reward_first10pct"] = float(r[..., :k].mean())
@@ -213,6 +222,9 @@ def run(args) -> None:
                     log_callback=tap,
                 )
                 params, metrics = out[0], out[1]
+                # the sharded runner returns bare replicated params; they
+                # save as a params-only checkpoint (servable, not resumable)
+                final_train = params
                 rewards = np.asarray(metrics["reward"]).ravel()
                 console.write(
                     {"per_executor_reward": rewards.tolist()}
@@ -228,6 +240,19 @@ def run(args) -> None:
         f"wall time: {wall:.1f}s  "
         f"({args.system} on {args.env}, runner={args.runner})"
     )
+    if args.save_checkpoint:
+        from repro.serve.checkpoint import save_policy
+
+        meta_path = save_policy(
+            args.save_checkpoint,
+            args.system,
+            args.env,
+            final_train,
+            env_kwargs=env_kwargs,
+            num_seeds=num_seeds,
+            step=args.iterations,
+        )
+        console.line(f"wrote policy checkpoint: {meta_path}")
     if args.log_every > 0 and tap is not None:
         console.line(f"streamed {tap.emits} in-flight telemetry rows")
 

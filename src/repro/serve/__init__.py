@@ -1,0 +1,35 @@
+"""repro.serve — checkpointed MARL policies behind a slot-based engine.
+
+The "millions of users" half of the north star: take any trained REGISTRY
+system (feed-forward or recurrent), persist it as a self-describing
+checkpoint, and serve per-user episodes as live decision traffic —
+
+* `save_policy` / `load_policy` / `fresh_system_state`
+  (`repro.serve.checkpoint`) — the train -> serve hand-off;
+* `DecisionEngine` / `ServeRequest` (`repro.serve.engine`) — the fixed
+  slot pool advancing all live episodes with one jitted tick;
+* `poisson_requests` / `serve_workload` (`repro.serve.traffic`) — the
+  reproducible synthetic-traffic harness behind ``BENCH_serve``.
+
+Driver: ``python -m repro.launch.serve_marl`` (see docs/SERVING.md).
+"""
+from repro.serve.checkpoint import (
+    fresh_system_state,
+    load_policy,
+    read_policy_meta,
+    save_policy,
+)
+from repro.serve.engine import DecisionEngine, ServeRequest
+from repro.serve.traffic import poisson_requests, serve_workload, workload_stats
+
+__all__ = [
+    "DecisionEngine",
+    "ServeRequest",
+    "fresh_system_state",
+    "load_policy",
+    "poisson_requests",
+    "read_policy_meta",
+    "save_policy",
+    "serve_workload",
+    "workload_stats",
+]

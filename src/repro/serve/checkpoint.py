@@ -1,0 +1,179 @@
+"""Self-describing MARL policy checkpoints (the train -> serve hand-off).
+
+A *policy checkpoint* is a directory holding the trained `TrainState`
+pytree (saved through `repro.checkpoint.ckpt`, the same .npz path the LM
+side uses) next to a ``policy.json`` metadata document recording the
+registry system name, env name, config overrides and provenance — so a
+checkpoint can be restored by name alone, with no reference to the
+training script that produced it:
+
+    save_policy(dir, "rec_ippo", "matrix_game", train_state)
+    env, system, train = load_policy(dir)        # rebuilt from the registry
+
+Seed-vectorized training (``train_anakin(..., num_seeds=N)``) produces
+train states whose every leaf carries a leading ``(N,)`` lane axis;
+`save_policy` splits those into per-seed lanes (``seed_0/ .. seed_{N-1}/``)
+so each lane restores as an ordinary single-seed policy
+(``load_policy(dir, seed=k)``).
+
+The shard_map runner returns bare replicated params rather than a full
+`TrainState`; those save with ``"tree": "params"`` and restore wrapped in
+a zero-step `TrainState` (enough to serve and evaluate, not to resume
+optimisation — recorded honestly in the metadata).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.core.system import init_system_state
+from repro.core.types import SystemState, TrainState
+
+POLICY_META = "policy.json"
+_FORMAT = "marl-policy-v1"
+
+
+def _is_train_state(tree) -> bool:
+    """True when ``tree`` is a full `TrainState` (vs bare params)."""
+    return isinstance(tree, TrainState)
+
+
+def save_policy(
+    directory: str,
+    system_name: str,
+    env_name: str,
+    train: Any,
+    *,
+    config_overrides: Optional[dict] = None,
+    env_kwargs: Optional[dict] = None,
+    num_seeds: Optional[int] = None,
+    step: int = 0,
+) -> str:
+    """Write a self-describing policy checkpoint directory.
+
+    ``train`` is a full `TrainState` (params + optimizer state + steps) or
+    bare params (the shard_map runner's replicated output).  With
+    ``num_seeds`` set, every leaf of ``train`` must carry a leading
+    ``(num_seeds,)`` lane axis (seed-vectorized training output); each
+    lane is saved under ``seed_<s>/`` as an independent policy.  Returns
+    the metadata path.
+    """
+    from repro.obs import provenance  # deferred: pulls in jax device init
+
+    os.makedirs(directory, exist_ok=True)
+    if num_seeds:
+        for s in range(num_seeds):
+            lane = jax.tree_util.tree_map(lambda x: jnp.asarray(x)[s], train)
+            save_checkpoint(os.path.join(directory, f"seed_{s}"), step, lane)
+    else:
+        save_checkpoint(directory, step, train)
+    meta = {
+        "format": _FORMAT,
+        "system": system_name,
+        "env": env_name,
+        "config_overrides": _jsonable(config_overrides or {}),
+        "env_kwargs": _jsonable(env_kwargs or {}),
+        "num_seeds": num_seeds,
+        "step": step,
+        "tree": "train_state" if _is_train_state(train) else "params",
+        "provenance": provenance(),
+    }
+    path = os.path.join(directory, POLICY_META)
+    with open(path, "w") as f:
+        json.dump(meta, f, indent=2)
+    return path
+
+
+def read_policy_meta(directory: str) -> dict:
+    """The ``policy.json`` metadata document of a checkpoint directory."""
+    with open(os.path.join(directory, POLICY_META)) as f:
+        meta = json.load(f)
+    if meta.get("format") != _FORMAT:
+        raise ValueError(
+            f"{directory!r} is not a {_FORMAT} checkpoint "
+            f"(format={meta.get('format')!r})"
+        )
+    return meta
+
+
+def load_policy(
+    directory: str, seed: Optional[int] = None
+) -> Tuple[Any, Any, TrainState]:
+    """Restore ``(env, system, train_state)`` from a policy checkpoint.
+
+    The (env, system) pair is rebuilt from the registries using the
+    recorded names and config overrides, so the restored `TrainState`
+    lands in exactly the pytree structure the system's ``init_train``
+    produces — the round trip the serving engine and the evaluator both
+    consume.  For a per-seed checkpoint, ``seed`` picks the lane
+    (default 0).
+    """
+    from repro.systems.registry import make_pair  # deferred: heavy import
+
+    meta = read_policy_meta(directory)
+    ckpt_dir = directory
+    if meta.get("num_seeds"):
+        seed = 0 if seed is None else seed
+        if not 0 <= seed < meta["num_seeds"]:
+            raise ValueError(
+                f"seed {seed} out of range for a {meta['num_seeds']}-seed "
+                "checkpoint"
+            )
+        ckpt_dir = os.path.join(directory, f"seed_{seed}")
+    elif seed not in (None, 0):
+        raise ValueError(f"{directory!r} is a single-seed checkpoint")
+
+    overrides = _tupled(meta.get("config_overrides", {}))
+    env_kwargs = meta.get("env_kwargs") or None
+    env, system = make_pair(
+        meta["system"], meta["env"], env_kwargs=env_kwargs, **overrides
+    )
+    target = system.init_train(jax.random.key(0))
+    if meta.get("tree") == "params":
+        params = restore_checkpoint(ckpt_dir, meta["step"], target.params)
+        train = TrainState(
+            params=params,
+            target_params=params,
+            opt_state=target.opt_state,
+            steps=jnp.zeros((), jnp.int32),
+        )
+    else:
+        train = restore_checkpoint(ckpt_dir, meta["step"], target)
+    # restore_checkpoint returns numpy leaves; put them on device once so
+    # the serving tick doesn't re-transfer the params every call
+    return env, system, jax.device_put(train)
+
+
+def fresh_system_state(system, train: TrainState, key, num_envs: int) -> SystemState:
+    """A fresh `SystemState` carrying a restored trainer.
+
+    The round trip the checkpoint satellite pins: envs, buffer and carry
+    are initialised from scratch (new episodes, empty dataset, zero
+    memory) while the trainer resumes from the checkpoint — ready for any
+    runner or for further training.
+    """
+    st = init_system_state(system, key, num_envs)
+    return st._replace(train=jax.tree_util.tree_map(jnp.asarray, train))
+
+
+def _jsonable(obj):
+    """Tuples -> lists, scalars passed through (json round-trip safety)."""
+    if isinstance(obj, dict):
+        return {k: _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (tuple, list)):
+        return [_jsonable(v) for v in obj]
+    return obj
+
+
+def _tupled(obj):
+    """Lists -> tuples on the way back in (configs declare tuple fields)."""
+    if isinstance(obj, dict):
+        return {k: _tupled(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return tuple(_tupled(v) for v in obj)
+    return obj

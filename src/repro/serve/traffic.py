@@ -1,0 +1,116 @@
+"""Env-backed synthetic traffic for the decision-serving engine.
+
+``BENCH_serve`` needs a reproducible stand-in for "millions of users":
+``N`` concurrent user streams, each submitting episode requests whose
+inter-arrival gaps are exponential — a per-stream Poisson process, merged
+into one arrival sequence measured in engine ticks.  Everything is seeded
+numpy, so a (seed, streams, rate) triple always replays the same traffic.
+
+`serve_workload` drives a `DecisionEngine` through one such trace and
+reduces its ``tick_log`` into the artifact's latency/throughput block:
+every decision made in a tick experiences that tick's wall time, so the
+per-decision latency distribution is the tick times weighted by live-slot
+counts — p50/p99 over exactly the decisions that were served.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import numpy as np
+
+from repro.serve.engine import DecisionEngine, ServeRequest
+
+
+def poisson_requests(
+    num_streams: int,
+    episodes_per_stream: int,
+    arrival_rate: float,
+    seed: int = 0,
+) -> List[ServeRequest]:
+    """Poisson arrivals over ``num_streams`` concurrent streams.
+
+    Each stream emits ``episodes_per_stream`` episode requests with
+    exponential inter-arrival gaps of rate ``arrival_rate`` (requests per
+    tick per stream); streams are merged and sorted by arrival tick (ties
+    broken by stream id, keeping admission order deterministic).  Each
+    request carries its own episode reset key, derived from ``seed`` and
+    its (stream, index) coordinates.  Arrival ticks ride in
+    ``ServeRequest.arrival_tick``; uids number the merged sequence 0..R-1.
+    """
+    if arrival_rate <= 0:
+        raise ValueError(f"arrival_rate must be > 0, got {arrival_rate}")
+    rng = np.random.default_rng(seed)
+    arrivals = []  # (tick, stream, index)
+    for s in range(num_streams):
+        gaps = rng.exponential(1.0 / arrival_rate, size=episodes_per_stream)
+        ticks = np.floor(np.cumsum(gaps)).astype(np.int64)
+        for j, t in enumerate(ticks):
+            arrivals.append((int(t), s, j))
+    arrivals.sort()
+    base = jax.random.key(seed)
+    requests = []
+    for uid, (tick, s, j) in enumerate(arrivals):
+        key = jax.random.fold_in(jax.random.fold_in(base, s), j)
+        requests.append(ServeRequest(uid=uid, key=key, arrival_tick=tick))
+    return requests
+
+
+def serve_workload(
+    engine: DecisionEngine,
+    requests: Sequence[ServeRequest],
+    max_ticks: int = 1_000_000,
+) -> Dict:
+    """Replay an arrival trace through ``engine`` and reduce the stats.
+
+    Requests are submitted when the engine's tick counter passes their
+    ``arrival_tick``; idle gaps between arrivals are skipped rather than
+    ticked through.  Returns the
+    BENCH_serve measurement block: per-decision latency percentiles,
+    decisions/sec, tick/decision/episode counts and the served episodes'
+    mean team return.
+    """
+    pending = sorted(requests, key=lambda r: (r.arrival_tick, r.uid))
+    first_logged = len(engine.tick_log)
+    clock = 0
+    i = 0
+    for _ in range(max_ticks):
+        while i < len(pending) and pending[i].arrival_tick <= clock:
+            engine.submit(pending[i])
+            i += 1
+        if engine.idle():
+            if i >= len(pending):
+                break
+            clock = pending[i].arrival_tick  # skip the idle gap
+            continue
+        engine.tick()
+        clock += 1
+    log = engine.tick_log[first_logged:]
+    return workload_stats(log, engine.finished)
+
+
+def workload_stats(tick_log: Sequence[Dict], finished: Sequence[ServeRequest]) -> Dict:
+    """Reduce a tick log + finished episodes to the BENCH_serve cell block."""
+    if not tick_log:
+        raise ValueError("empty tick log: the workload never served a decision")
+    seconds = np.asarray([t["seconds"] for t in tick_log], np.float64)
+    live = np.asarray([t["live"] for t in tick_log], np.int64)
+    # each of a tick's `live` decisions experienced that tick's wall time
+    per_decision = np.repeat(seconds, live)
+    total = float(seconds.sum())
+    decisions = int(live.sum())
+    returns = [r.episode_return for r in finished]
+    return {
+        "ticks": len(tick_log),
+        "decisions": decisions,
+        "episodes": len(finished),
+        "decisions_per_sec": decisions / total if total > 0 else 0.0,
+        "latency": {
+            "p50_ms": float(np.percentile(per_decision, 50) * 1e3),
+            "p99_ms": float(np.percentile(per_decision, 99) * 1e3),
+            "mean_ms": float(per_decision.mean() * 1e3),
+        },
+        "mean_live_slots": float(live.mean()),
+        "episode_return_mean": float(np.mean(returns)) if returns else 0.0,
+        "wall_seconds": total,
+    }

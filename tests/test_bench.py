@@ -10,6 +10,8 @@ import pytest
 from repro.bench.schema import (
     check_eval_full_matrix,
     check_eval_schema,
+    check_serve_schema,
+    check_serve_slice,
     check_speed_full_matrix,
     check_speed_schema,
 )
@@ -189,6 +191,8 @@ def test_checked_in_artifacts_conform_to_schema():
         assert check_eval_full_matrix(json.load(f)) == []
     with open(REPO / "BENCH_speed.json") as f:
         assert check_speed_full_matrix(json.load(f)) == []
+    with open(REPO / "BENCH_serve.json") as f:
+        assert check_serve_slice(json.load(f)) == []
 
 
 def test_schema_coverage_pins_track_the_live_registries():
@@ -207,9 +211,15 @@ def test_schema_coverage_pins_track_the_live_registries():
     from repro.envs import REGISTRY as ENV_REGISTRY
     from repro.systems.registry import REGISTRY as SYS_REGISTRY
 
+    from repro.bench.schema import SERVE_SLICE_SYSTEMS
+
     assert list(FULL_MATRIX_SYSTEMS) == sorted(SYS_REGISTRY)
     assert list(FULL_MATRIX_ENVS) == sorted(ENV_REGISTRY)
     assert set(SPEED_SLICE_SYSTEMS) <= set(SYS_REGISTRY)
+    assert set(SERVE_SLICE_SYSTEMS) <= set(SYS_REGISTRY)
+    # the serve slice must keep covering one ff and one recurrent system
+    assert any(s.startswith("rec_") for s in SERVE_SLICE_SYSTEMS)
+    assert any(not s.startswith("rec_") for s in SERVE_SLICE_SYSTEMS)
 
 
 def test_full_matrix_pin_catches_missing_recurrent_rows():
@@ -237,6 +247,34 @@ def test_speed_schema_catches_drift():
     assert any("anakin" in e for e in errs)
     assert any("num_seeds" in e for e in errs)
     assert to_markdown  # markdown renderer stays importable with the schema
+
+
+def test_serve_schema_catches_drift():
+    with open(REPO / "BENCH_serve.json") as f:
+        doc = json.load(f)
+    assert check_serve_schema(doc) == []
+    doc["cells"][0]["latency"]["p99_ms"] = 0.5 * doc["cells"][0]["latency"]["p50_ms"]
+    del doc["cells"][1]["decisions_per_sec"]
+    doc["config"].pop("arrival_rate")
+    errs = check_serve_schema(doc)
+    assert any("p99" in e for e in errs)
+    assert any("decisions_per_sec" in e for e in errs)
+    assert any("arrival_rate" in e for e in errs)
+
+
+def test_serve_slice_catches_missing_slot_counts():
+    """One slot count per served system is not a sweep — the pin trips."""
+    with open(REPO / "BENCH_serve.json") as f:
+        doc = json.load(f)
+    slots = sorted({c["max_slots"] for c in doc["cells"]})
+    doc["cells"] = [c for c in doc["cells"] if c["max_slots"] == slots[0]]
+    errs = check_serve_slice(doc)
+    assert any("slot" in e for e in errs)
+    with open(REPO / "BENCH_serve.json") as f:
+        doc = json.load(f)
+    doc["cells"] = [c for c in doc["cells"] if c["system"] != "rec_ippo"]
+    errs = check_serve_slice(doc)
+    assert any("rec_ippo" in e for e in errs)
 
 
 def test_eval_schema_catches_drift():
@@ -330,3 +368,7 @@ def test_bench_schemas_require_provenance():
     assert any("provenance" in e for e in check_speed_schema(speed))
     ev["provenance"]["jax_version"] = ""
     assert any("jax_version" in e for e in check_eval_schema(ev))
+    with open(REPO / "BENCH_serve.json") as f:
+        serve = json.load(f)
+    serve.pop("provenance")
+    assert any("provenance" in e for e in check_serve_schema(serve))
