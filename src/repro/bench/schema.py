@@ -24,6 +24,11 @@ _RUNNER_KEYS = ("python_loop", "anakin", "shard_map")
 _SEEDVEC_KEYS = (
     "num_seeds", "serial_steps_per_sec", "vmapped_steps_per_sec", "speedup",
 )
+# the optional per-cell fused-recurrent rung (recurrent systems only):
+# anakin with the linear associative-scan core vs the reference GRU core
+_FUSED_RECURRENT_NUM_KEYS = (
+    "reference_steps_per_sec", "fused_steps_per_sec", "speedup",
+)
 # the provenance block (produced by repro.obs.record.provenance) required
 # on every artifact: string fields + the device count
 _PROVENANCE_STR_KEYS = (
@@ -49,6 +54,11 @@ FULL_MATRIX_ENVS = (
     "speaker_listener", "spread", "switch_game",
 )
 SPEED_SLICE_SYSTEMS = ("vdn", "ippo", "rec_ippo")
+# the checked-in fused-recurrent coverage: the recurrent speed-slice system
+# must carry a fused_recurrent rung on the matrix game plus one gridworld,
+# so the rec/ff gap number stays comparable across PRs
+FUSED_RECURRENT_SYSTEM = "rec_ippo"
+FUSED_RECURRENT_ENVS = ("matrix_game", "lbf")
 # BENCH_serve's checked-in coverage: a feed-forward and a recurrent system
 # must each be served at >= MIN_SERVE_SLOT_COUNTS distinct slot-pool sizes
 # (the artifact's whole point is latency/throughput *vs slot count*)
@@ -217,6 +227,16 @@ def check_speed_schema(doc: Dict) -> List[str]:
                 errs.append(f"{where}.seed_vectorization.{k} must be a number")
         if _num(sv.get("speedup")) and sv["speedup"] <= 0:
             errs.append(f"{where}.seed_vectorization.speedup must be > 0")
+        fr = cell.get("fused_recurrent")
+        if fr is not None:
+            for k in ("core", "reference_core"):
+                if not isinstance(fr.get(k), str) or not fr.get(k):
+                    errs.append(
+                        f"{where}.fused_recurrent.{k} must be a non-empty string"
+                    )
+            for k in _FUSED_RECURRENT_NUM_KEYS:
+                if not _num(fr.get(k)) or fr.get(k, 0) <= 0:
+                    errs.append(f"{where}.fused_recurrent.{k} must be > 0")
     return errs
 
 
@@ -340,6 +360,19 @@ def check_speed_full_matrix(doc: Dict) -> List[str]:
     for s in SPEED_SLICE_SYSTEMS:
         if s not in have:
             errs.append(f"speed slice missing system {s!r}")
+    if isinstance(cells, list):
+        fused_envs = {
+            c.get("env") for c in cells
+            if isinstance(c, dict)
+            and c.get("system") == FUSED_RECURRENT_SYSTEM
+            and isinstance(c.get("fused_recurrent"), dict)
+        }
+        for e in FUSED_RECURRENT_ENVS:
+            if e not in fused_envs:
+                errs.append(
+                    f"speed slice missing fused_recurrent rung for "
+                    f"({FUSED_RECURRENT_SYSTEM}, {e})"
+                )
     return errs
 
 

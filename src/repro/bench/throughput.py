@@ -15,11 +15,18 @@ trained serially (one compiled per-seed program called N times) vs the same
 N seeds as a single vmapped jit program (`train_anakin(..., num_seeds=N)`),
 with identical per-seed keys so both sides do bitwise-identical work.
 
+Recurrent cells additionally report a ``fused_recurrent`` rung: the same
+anakin program with the system's memory core switched from the reference
+GRU `ScannedRNN` to the fused associative-scan `LinearScannedRNN`
+(``recurrent_core="linear"``), quantifying how much of the rec/ff
+throughput gap the fused core closes (see docs/KERNELS.md).
+
 All fused timings exclude compilation (warm call first); steps/sec counts
 *environment* steps summed over envs, devices and seeds.
 """
 from __future__ import annotations
 
+import dataclasses
 import pathlib
 import time
 from typing import Dict, Optional, Sequence
@@ -156,6 +163,36 @@ def measure_seed_vectorization(
     }
 
 
+def measure_fused_recurrent(
+    system_name: str,
+    env_name: str,
+    iterations: int,
+    num_envs: int,
+    reference_steps_per_sec: float,
+    overrides: dict,
+) -> Dict:
+    """Fused linear-core anakin throughput vs the GRU reference core.
+
+    Rebuilds the same (system, env) cell at the same operating point with
+    ``recurrent_core="linear"`` and times the same anakin program, so the
+    ratio isolates the memory-core swap (gates precomputed in one batched
+    projection + whole-window associative scan vs a sequential per-step
+    GRU scan).  ``reference_steps_per_sec`` is the cell's already-measured
+    default-core anakin number — the two rows share every other knob.
+    """
+    _, fused_system = make_pair(
+        system_name, env_name, **{**overrides, "recurrent_core": "linear"}
+    )
+    fused = measure_anakin(fused_system, iterations, num_envs)
+    return {
+        "core": "linear",
+        "reference_core": "gru",
+        "reference_steps_per_sec": reference_steps_per_sec,
+        "fused_steps_per_sec": fused["steps_per_sec"],
+        "speedup": fused["steps_per_sec"] / reference_steps_per_sec,
+    }
+
+
 def bench_cell(
     system_name: str,
     env_name: str,
@@ -187,6 +224,22 @@ def bench_cell(
     sharded = measure_shard_map(dist_system, iterations, num_envs)
     anakin["speedup_vs_loop"] = anakin["steps_per_sec"] / loop["steps_per_sec"]
     sharded["speedup_vs_loop"] = sharded["steps_per_sec"] / loop["steps_per_sec"]
+    # the fused-recurrent rung applies where the system (a) exposes the
+    # memory-core selector and (b) actually threads memory (ff systems
+    # share PPOConfig but carry an empty pytree)
+    entry = REGISTRY[system_name]
+    has_core_field = "recurrent_core" in {
+        f.name for f in dataclasses.fields(entry.config_cls)
+    }
+    is_recurrent = bool(jax.tree_util.tree_leaves(system.initial_carry(())))
+    fused = (
+        measure_fused_recurrent(
+            system_name, env_name, iterations, num_envs,
+            anakin["steps_per_sec"], overrides,
+        )
+        if has_core_field and is_recurrent
+        else None
+    )
     return {
         "system": system_name,
         "env": env_name,
@@ -202,6 +255,7 @@ def bench_cell(
         "seed_vectorization": measure_seed_vectorization(
             system, num_seeds, iterations, num_envs
         ),
+        **({"fused_recurrent": fused} if fused is not None else {}),
     }
 
 
@@ -250,12 +304,15 @@ def run_bench(
                 _console.line(f"{sys_name:>10s} x {env_name:<18s}: skipped ({cell['reason']})")
                 continue
             sv = cell["seed_vectorization"]
+            fr = cell.get("fused_recurrent")
+            fused_note = f"fused core={fr['speedup']:.1f}x  " if fr else ""
             _console.line(
                 f"{sys_name:>10s} x {env_name:<18s}: "
                 f"loop={cell['runners']['python_loop']['steps_per_sec']:,.0f} "
                 f"anakin={cell['runners']['anakin']['steps_per_sec']:,.0f} "
                 f"shard_map={cell['runners']['shard_map']['steps_per_sec']:,.0f} steps/s  "
                 f"{sv['num_seeds']}-seed vmap speedup={sv['speedup']:.1f}x  "
+                f"{fused_note}"
                 f"({time.perf_counter() - t0:.1f}s)"
             )
 
@@ -278,25 +335,33 @@ def to_markdown(results: Dict) -> str:
         f"{cfg['num_seeds']} seeds, backend={cfg['backend']} "
         f"({cfg['num_devices']} device(s)). Steps/sec counts environment "
         "steps over all envs/devices/seeds; `vmap speedup` is serial "
-        "per-seed training vs one vmapped multi-seed jit.",
+        "per-seed training vs one vmapped multi-seed jit; `fused core` is "
+        "anakin with the linear associative-scan memory core vs the "
+        "reference GRU (recurrent systems only, see docs/KERNELS.md).",
         "",
         "| system | env | python loop (steps/s) | anakin (steps/s) | "
-        "shard_map (steps/s) | vmap speedup |",
-        "|---|---|---|---|---|---|",
+        "shard_map (steps/s) | vmap speedup | fused core |",
+        "|---|---|---|---|---|---|---|",
     ]
     for cell in results["cells"]:
         if not cell.get("compatible"):
             lines.append(
-                f"| {cell['system']} | {cell['env']} | -- | -- | -- | -- |"
+                f"| {cell['system']} | {cell['env']} | -- | -- | -- | -- | -- |"
             )
             continue
         r, sv = cell["runners"], cell["seed_vectorization"]
+        fr = cell.get("fused_recurrent")
+        fused_col = (
+            f"{fr['fused_steps_per_sec']:,.0f} ({fr['speedup']:.1f}x)"
+            if fr else "--"
+        )
         lines.append(
             f"| {cell['system']} | {cell['env']} "
             f"| {r['python_loop']['steps_per_sec']:,.0f} "
             f"| {r['anakin']['steps_per_sec']:,.0f} "
             f"({r['anakin']['speedup_vs_loop']:.0f}x) "
             f"| {r['shard_map']['steps_per_sec']:,.0f} "
-            f"| {sv['speedup']:.1f}x @ {sv['num_seeds']} seeds |"
+            f"| {sv['speedup']:.1f}x @ {sv['num_seeds']} seeds "
+            f"| {fused_col} |"
         )
     return "\n".join(lines) + "\n"

@@ -1,7 +1,45 @@
 """Pallas TPU kernels for the compute hot-spots.
 
-Each kernel package has:
+Each kernel package has the same three-file layout (the authoring contract
+is documented end-to-end in docs/KERNELS.md):
+
   kernel.py — pl.pallas_call with explicit BlockSpec VMEM tiling (TPU target)
-  ops.py    — jit'd public wrapper (interpret=True on CPU for validation)
+  ops.py    — jit'd public wrapper: padding, the interpret/backed dispatch
+              and (where the op is differentiable) the custom_vjp seam
   ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Importing this package never touches an accelerator: `default_interpret`
+below is the single interpret-mode guard every ops wrapper consults, and
+it only *reads* ``jax.default_backend()`` — no Pallas lowering, no device
+compilation happens at import time, so importing kernels on a no-GPU/TPU
+box cannot hard-fail (tests/test_recurrent_scan.py smoke-tests this).
+Kernels compile lazily, on the first call of an op.
 """
+import jax
+
+
+def default_interpret() -> bool:
+    """Whether Pallas calls should default to interpreter mode.
+
+    True everywhere except on a real TPU backend: the kernels in this
+    package target TPU, and the Pallas interpreter is the only way to run
+    them elsewhere (CI runs the parity sweeps through it).  Ops that have
+    a pure-XLA fallback (`recurrent_scan`) use this guard to pick that
+    fast path instead of interpreting.  Callers can always override per
+    call via their ``interpret=`` keyword.
+    """
+    return jax.default_backend() != "tpu"
+
+
+from repro.kernels.flash_attention.ops import flash_attention  # noqa: E402
+from repro.kernels.fused_xent.ops import fused_softmax_xent  # noqa: E402
+from repro.kernels.recurrent_scan.ops import linear_recurrent_scan  # noqa: E402
+from repro.kernels.selective_scan.ops import selective_scan  # noqa: E402
+
+__all__ = [
+    "default_interpret",
+    "flash_attention",
+    "fused_softmax_xent",
+    "linear_recurrent_scan",
+    "selective_scan",
+]

@@ -1,3 +1,4 @@
+"""Flash-attention (tiled online-softmax) kernel package."""
 from repro.kernels.flash_attention.ops import flash_attention
 
 __all__ = ["flash_attention"]

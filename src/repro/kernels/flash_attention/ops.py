@@ -11,12 +11,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import default_interpret
 from repro.kernels.flash_attention.kernel import flash_attention_kernel
 from repro.kernels.flash_attention.ref import attention_ref
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 @functools.partial(
@@ -40,7 +37,7 @@ def flash_attention(
     query; for non-causal use the ref path).
     """
     if interpret is None:
-        interpret = _default_interpret()
+        interpret = default_interpret()
 
     @functools.partial(jax.custom_vjp)
     def _op(q, k, v):

@@ -1,3 +1,4 @@
+"""Fused softmax-cross-entropy kernel package."""
 from repro.kernels.fused_xent.ops import fused_softmax_xent
 
 __all__ = ["fused_softmax_xent"]

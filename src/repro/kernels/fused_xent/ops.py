@@ -6,11 +6,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import default_interpret
 from repro.kernels.fused_xent.kernel import fused_xent_kernel
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("block_t", "block_v", "interpret"))
@@ -30,7 +27,7 @@ def fused_softmax_xent(
     at most block_v, so no fake logits enter the logsumexp.
     """
     if interpret is None:
-        interpret = _default_interpret()
+        interpret = default_interpret()
     T, d = x.shape
     V = w.shape[-1]
     bt = min(block_t, T)

@@ -1,0 +1,4 @@
+"""Gated-linear-recurrence (fused RNN unroll) kernel package."""
+from repro.kernels.recurrent_scan.ops import linear_recurrent_scan
+
+__all__ = ["linear_recurrent_scan"]

@@ -1,0 +1,126 @@
+"""Public gated-linear-recurrence op: fused RNN unroll with a custom VJP.
+
+``linear_recurrent_scan(a, b, h0, reset)`` evaluates
+
+    h_t = a_t * (1 - reset_t) * h_{t-1} + b_t
+
+over a leading time axis — the whole-trajectory unroll of any linear
+recurrent core (`repro.nn.LinearScannedRNN`), with episode-boundary resets
+folded into the decay coefficient *inside* the fused scan rather than
+masked onto the carry between python-level scan steps.
+
+Three execution paths behind one signature:
+
+* **TPU (default on TPU backends)** — the blocked associative-scan Pallas
+  kernel (`kernel.py`), compiled;
+* **non-TPU default** — the same log-depth algorithm as one fused XLA
+  ``lax.associative_scan`` (no Pallas involved), so CPU/GPU boxes get the
+  parallel-scan throughput win without the Pallas interpreter;
+* **``interpret=True``** — the Pallas kernel through the interpreter,
+  for CI parity sweeps against the sequential oracle (`ref.py`).
+
+Differentiable via ``jax.custom_vjp``: the adjoint recurrence
+``lam_t = g_t + a_{t+1} * lam_{t+1}`` is itself a first-order linear
+recurrence, so the backward pass re-runs the *same* fused forward on
+time-reversed arrays (on TPU the backward hits the same kernel).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.recurrent_scan.kernel import _combine, linear_scan_kernel
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d", "interpret"))
+def linear_recurrent_scan(
+    a,
+    b,
+    h0,
+    reset=None,
+    *,
+    chunk: int = 128,
+    block_d: int = 512,
+    interpret: bool | None = None,
+):
+    """a, b: (T, ..., H); h0: (..., H); reset: (T, ...) bools -> hs (T, ..., H).
+
+    Inclusive outputs: ``hs[t]`` is the state *after* absorbing row ``t``
+    (the final carry is ``hs[-1]``).  ``reset`` rows restart the recurrence
+    from ``b_t`` alone by zeroing that row's decay — the fused form of the
+    memory-core protocol's `reset_carry` rule.  ``interpret=None`` picks
+    the compiled Pallas kernel on TPU and the pure-XLA associative scan
+    elsewhere; ``interpret=True`` forces the kernel through the Pallas
+    interpreter (validation only — far too slow for training).
+    """
+    T = a.shape[0]
+    if reset is None:
+        r = jnp.zeros(a.shape[:-1] + (1,), a.dtype)
+    else:
+        r = reset.astype(a.dtype)[..., None]
+    if interpret is None:
+        use_pallas, pallas_interpret = not default_interpret(), False
+    else:
+        use_pallas, pallas_interpret = True, interpret
+
+    def _fwd_impl(a, b, r, h0):
+        """Dispatch one fused forward scan (shared by forward and backward)."""
+        if not use_pallas:
+            a_eff = a * (1.0 - r)
+            A, B = jax.lax.associative_scan(_combine, (a_eff, b), axis=0)
+            return A * h0[None] + B
+        batch = a.shape[1:]
+        D = math.prod(batch)
+        rb = jnp.broadcast_to(r, a.shape)
+        a2, b2, r2 = (t.reshape(T, D) for t in (a, b, rb))
+        h2 = h0.reshape(1, D)
+        bd = min(block_d, _round_up(D, 128))
+        ck = min(chunk, _round_up(T, 8))
+        pad_t, pad_d = (-T) % ck, (-D) % bd
+        if pad_t or pad_d:
+            # zero padding is inert (a=0, b=0 holds the padded lanes at 0)
+            zp = lambda t: jnp.pad(t, ((0, pad_t), (0, pad_d)))
+            a2, b2, r2 = zp(a2), zp(b2), zp(r2)
+            h2 = jnp.pad(h2, ((0, 0), (0, pad_d)))
+        hs = linear_scan_kernel(
+            a2, b2, r2, h2, block_d=bd, chunk=ck, interpret=pallas_interpret
+        )
+        return hs[:T, :D].reshape((T, *batch))
+
+    @jax.custom_vjp
+    def _op(a, b, r, h0):
+        return _fwd_impl(a, b, r, h0)
+
+    def _fwd(a, b, r, h0):
+        hs = _fwd_impl(a, b, r, h0)
+        return hs, (a, b, r, h0, hs)
+
+    def _bwd(res, g):
+        a, b, r, h0, hs = res
+        a_eff = a * (1.0 - r)
+        # The adjoint lam_t = g_t + a_eff_{t+1} * lam_{t+1} is the same
+        # recurrence on time-reversed arrays with the decay shifted one
+        # step, so the backward re-uses the fused forward path.
+        a_shift = jnp.concatenate([a_eff[1:], jnp.zeros_like(a_eff[:1])], 0)
+        lam = jnp.flip(
+            _fwd_impl(
+                jnp.flip(a_shift, 0), jnp.flip(g, 0),
+                jnp.zeros_like(r), jnp.zeros_like(h0),
+            ),
+            0,
+        )
+        h_prev = jnp.concatenate([h0[None], hs[:-1]], 0)
+        da_eff = lam * h_prev
+        dr = -jnp.sum(da_eff * a, axis=-1, keepdims=True)
+        return da_eff * (1.0 - r), lam, dr, a_eff[0] * lam[0]
+
+    _op.defvjp(_fwd, _bwd)
+    return _op(a, b, r, h0)

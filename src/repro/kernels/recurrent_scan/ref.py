@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the gated linear recurrence.
+
+The sequential `lax.scan` definition of
+
+    h_t = a_t * h_{t-1} + b_t        (elementwise over the feature dim)
+
+used by the allclose test sweeps as ground truth for both the Pallas
+kernel and the XLA associative-scan fast path in ``ops.py``.  An optional
+``reset`` mask folds into the decay coefficient exactly the way the fused
+paths do it (``a_t <- a_t * (1 - reset_t)``), so the oracle pins the
+reset-in-kernel semantics too, not just the recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_recurrence_ref(a, b, h0, reset=None):
+    """Sequential oracle: ``a, b: (T, ..., H); h0: (..., H) -> hs (T, ..., H)``.
+
+    ``reset`` (optional ``(T, ...)`` booleans) zeroes the incoming hidden
+    state at marked rows by zeroing that row's decay — the same fold the
+    fused implementations apply, so all three paths share one semantics.
+    """
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    if reset is not None:
+        a = a * (1.0 - reset[..., None].astype(jnp.float32))
+
+    def step(h, ab_t):
+        a_t, b_t = ab_t
+        h = a_t * h + b_t
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32), (a, b))
+    return hs

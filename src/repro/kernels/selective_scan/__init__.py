@@ -1,3 +1,4 @@
+"""Selective-scan (Mamba1 SSM recurrence) kernel package."""
 from repro.kernels.selective_scan.ops import selective_scan
 
 __all__ = ["selective_scan"]

@@ -10,12 +10,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import default_interpret
 from repro.kernels.selective_scan.kernel import selective_scan_kernel
 from repro.kernels.selective_scan.ref import selective_scan_ref
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "chunk", "interpret"))
@@ -36,7 +33,7 @@ def selective_scan(
     Returns (y: (b,S,di), h_final: (b,di,N) fp32).
     """
     if interpret is None:
-        interpret = _default_interpret()
+        interpret = default_interpret()
     b, S, di = x.shape
     c = min(chunk, S)
 

@@ -5,7 +5,7 @@ serial-vs-vmapped-seed speedup for a systems x envs slice, and writes the
 ``BENCH_speed.json`` + ``BENCH_speed.md`` perf-trajectory artifact (schema
 in docs/BENCH.md, validated by ``scripts/check_bench_schema.py``).
 
-  # the default slice (vdn + ippo + rec_ippo on matrix_game + spread)
+  # the default slice (vdn + ippo + rec_ippo on matrix_game + spread + lbf)
   PYTHONPATH=src python -m repro.launch.bench_marl
 
   # CI smoke scale
@@ -33,8 +33,9 @@ def main():
     )
     p.add_argument(
         "--envs", nargs="+", choices=sorted(ENVS) + ["all"],
-        default=["matrix_game", "spread"],
-        help="envs to bench (default: the cheapest classic pair)",
+        default=["matrix_game", "spread", "lbf"],
+        help="envs to bench (default: the cheapest classic pair plus one "
+        "gridworld, covering the fused-recurrent rung's pinned envs)",
     )
     p.add_argument("--iterations", type=int, default=256,
                    help="fused-runner training iterations per timed call")

@@ -20,7 +20,13 @@ from repro.nn.layers import (
     GRUCell,
     Sequential,
 )
-from repro.nn.recurrent import ScannedRNN, reset_carry, window_start_carry
+from repro.nn.recurrent import (
+    LinearScannedRNN,
+    ScannedRNN,
+    make_core,
+    reset_carry,
+    window_start_carry,
+)
 from repro.nn import initializers
 
 __all__ = [
@@ -30,9 +36,11 @@ __all__ = [
     "LayerNorm",
     "MLP",
     "GRUCell",
+    "LinearScannedRNN",
     "ScannedRNN",
     "Sequential",
     "initializers",
+    "make_core",
     "reset_carry",
     "window_start_carry",
 ]

@@ -8,16 +8,19 @@ import jax.numpy as jnp
 
 
 def zeros(key, shape, dtype=jnp.float32):
+    """All-zeros init (key ignored; matches the keyed initializer signature)."""
     del key
     return jnp.zeros(shape, dtype)
 
 
 def ones(key, shape, dtype=jnp.float32):
+    """All-ones init (key ignored; matches the keyed initializer signature)."""
     del key
     return jnp.ones(shape, dtype)
 
 
 def normal(stddev: float = 1.0):
+    """Gaussian init with the given standard deviation."""
     def init(key, shape, dtype=jnp.float32):
         return (jax.random.normal(key, shape) * stddev).astype(dtype)
 
@@ -25,6 +28,7 @@ def normal(stddev: float = 1.0):
 
 
 def truncated_normal(stddev: float = 1.0):
+    """Gaussian init truncated at two standard deviations."""
     def init(key, shape, dtype=jnp.float32):
         return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * stddev).astype(
             dtype
@@ -47,6 +51,7 @@ def lecun_normal(in_axis: int = -2):
 
 
 def orthogonal(scale: float = 1.0):
+    """Orthogonal init (QR of a Gaussian), the PPO-style policy default."""
     def init(key, shape, dtype=jnp.float32):
         if len(shape) < 2:
             raise ValueError("orthogonal init needs >=2D shape")

@@ -18,6 +18,8 @@ from repro.nn import initializers
 
 @dataclasses.dataclass(frozen=True)
 class Dense:
+    """Affine layer ``y = x @ w (+ b)`` with configurable init and axes."""
+
     in_dim: int
     out_dim: int
     use_bias: bool = True
@@ -26,6 +28,7 @@ class Dense:
     logical_axes: tuple = (None, None)
 
     def init(self, key):
+        """Initialise ``{"w", ("b")}`` with `w_init` / zeros."""
         wkey, _ = jax.random.split(key)
         params = {"w": self.w_init(wkey, (self.in_dim, self.out_dim), self.dtype)}
         if self.use_bias:
@@ -33,12 +36,14 @@ class Dense:
         return params
 
     def apply(self, params, x):
+        """Apply the affine map to the trailing dim of ``x``."""
         y = x @ params["w"]
         if self.use_bias:
             y = y + params["b"]
         return y
 
     def axes(self):
+        """Logical sharding axes matching `init`'s pytree."""
         out = {"w": self.logical_axes}
         if self.use_bias:
             out["b"] = (self.logical_axes[1],)
@@ -47,15 +52,19 @@ class Dense:
 
 @dataclasses.dataclass(frozen=True)
 class Embed:
+    """Token-embedding table lookup (with tied-output `attend`)."""
+
     vocab: int
     dim: int
     dtype: jnp.dtype = jnp.float32
     logical_axes: tuple = (None, None)
 
     def init(self, key):
+        """Initialise the ``(vocab, dim)`` embedding table."""
         return {"embedding": initializers.normal(1.0)(key, (self.vocab, self.dim), self.dtype)}
 
     def apply(self, params, ids):
+        """Look up rows of the table for integer ``ids``."""
         return jnp.take(params["embedding"], ids, axis=0)
 
     def attend(self, params, x):
@@ -63,33 +72,42 @@ class Embed:
         return x @ params["embedding"].T
 
     def axes(self):
+        """Logical sharding axes matching `init`'s pytree."""
         return {"embedding": self.logical_axes}
 
 
 @dataclasses.dataclass(frozen=True)
 class RMSNorm:
+    """Root-mean-square normalisation (no mean subtraction, fp32 math)."""
+
     dim: int
     eps: float = 1e-6
 
     def init(self, key):
+        """Initialise the per-feature ``scale`` at ones."""
         del key
         return {"scale": jnp.ones((self.dim,), jnp.float32)}
 
     def apply(self, params, x):
+        """Normalise the trailing dim by its RMS and rescale."""
         var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
         y = x * jax.lax.rsqrt(var + self.eps)
         return (y * params["scale"]).astype(x.dtype)
 
     def axes(self):
+        """Logical sharding axes matching `init`'s pytree."""
         return {"scale": (None,)}
 
 
 @dataclasses.dataclass(frozen=True)
 class LayerNorm:
+    """Standard layer normalisation (mean/variance over the trailing dim)."""
+
     dim: int
     eps: float = 1e-5
 
     def init(self, key):
+        """Initialise ``scale`` at ones and ``bias`` at zeros."""
         del key
         return {
             "scale": jnp.ones((self.dim,), jnp.float32),
@@ -97,6 +115,7 @@ class LayerNorm:
         }
 
     def apply(self, params, x):
+        """Normalise the trailing dim, then rescale and shift."""
         x32 = x.astype(jnp.float32)
         mean = jnp.mean(x32, axis=-1, keepdims=True)
         var = jnp.var(x32, axis=-1, keepdims=True)
@@ -104,6 +123,7 @@ class LayerNorm:
         return (y * params["scale"] + params["bias"]).astype(x.dtype)
 
     def axes(self):
+        """Logical sharding axes matching `init`'s pytree."""
         return {"scale": (None,), "bias": (None,)}
 
 
@@ -123,11 +143,13 @@ class MLP:
         ]
 
     def init(self, key):
+        """Initialise one ``dense_{i}`` sub-tree per layer."""
         layers = self._layers()
         keys = jax.random.split(key, len(layers))
         return {f"dense_{i}": l.init(k) for i, (l, k) in enumerate(zip(layers, keys))}
 
     def apply(self, params, x):
+        """Forward pass, activating between layers (and after, if asked)."""
         layers = self._layers()
         for i, layer in enumerate(layers):
             x = layer.apply(params[f"dense_{i}"], x)
@@ -136,6 +158,7 @@ class MLP:
         return x
 
     def axes(self):
+        """Logical sharding axes matching `init`'s pytree."""
         return {f"dense_{i}": l.axes() for i, l in enumerate(self._layers())}
 
 
@@ -147,6 +170,7 @@ class GRUCell:
     hidden_dim: int
 
     def init(self, key):
+        """Initialise input/hidden gate projections and their biases."""
         k1, k2, k3 = jax.random.split(key, 3)
         h = self.hidden_dim
         lecun = initializers.lecun_normal()
@@ -169,24 +193,31 @@ class GRUCell:
         return (1.0 - z) * n + z * h
 
     def initial_state(self, batch_shape=()):
+        """The zero hidden state, shaped ``(*batch_shape, hidden_dim)``."""
         return jnp.zeros((*batch_shape, self.hidden_dim))
 
     def axes(self):
+        """Logical sharding axes matching `init`'s pytree."""
         return {"wi": (None, None), "wh": (None, None), "bi": (None,), "bh": (None,)}
 
 
 @dataclasses.dataclass(frozen=True)
 class Sequential:
+    """Compose layers in order, each reading its own ``layer_{i}`` params."""
+
     layers: Sequence
 
     def init(self, key):
+        """Initialise one ``layer_{i}`` sub-tree per layer."""
         keys = jax.random.split(key, len(self.layers))
         return {f"layer_{i}": l.init(k) for i, (l, k) in enumerate(zip(self.layers, keys))}
 
     def apply(self, params, x):
+        """Apply each layer in sequence."""
         for i, layer in enumerate(self.layers):
             x = layer.apply(params[f"layer_{i}"], x)
         return x
 
     def axes(self):
+        """Logical sharding axes matching `init`'s pytree."""
         return {f"layer_{i}": l.axes() for i, l in enumerate(self.layers)}

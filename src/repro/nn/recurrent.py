@@ -3,11 +3,16 @@
 Every recurrent system in the library (rec-IPPO / rec-MAPPO / DIAL / RIAL)
 threads its memory through the same three pieces:
 
-* `ScannedRNN` — a GRU core with the JaxMARL-style
+* a **memory core** with the JaxMARL-style
   ``(carry, inputs) -> (carry, outputs)`` contract, stepped once at act
-  time and `lax.scan`-unrolled over stored trajectories at train time,
-  with episode-boundary resets applied *inside* the scan (no host round
-  trips);
+  time and unrolled over stored trajectories at train time, with
+  episode-boundary resets applied *inside* the scan (no host round
+  trips).  Two interchangeable cores implement the contract — `ScannedRNN`
+  (the GRU reference path, sequential ``lax.scan`` BPTT) and
+  `LinearScannedRNN` (a gated-linear / minGRU-style cell whose unroll is
+  an exact associative scan, dispatched to the fused
+  `repro.kernels.recurrent_scan` path) — selected per system through
+  `make_core` / the systems' ``recurrent_core`` config field;
 * `reset_carry` — the one reset-masking rule: zero (or re-initialise)
   executor memory wherever a step is the FIRST of a new episode.  The
   Anakin/shard_map runners apply it at `AutoReset` boundaries, and BPTT
@@ -33,7 +38,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.nn.layers import GRUCell
+from repro.nn.layers import Dense, GRUCell
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +110,111 @@ class ScannedRNN:
     def axes(self):
         """Logical sharding axes (delegates to the GRU cell)."""
         return self.cell.axes()
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearScannedRNN:
+    """A gated-linear memory core whose unroll is an exact associative scan.
+
+    The minGRU-style update (Feng et al. 2024's "were RNNs all we
+    needed?" simplification):
+
+        z_t    = sigmoid(x_t W_z + c_z)          (update gate)
+        cand_t = tanh(x_t W_h + c_h)             (candidate state)
+        h_t    = (1 - z_t) * h_{t-1} + z_t * cand_t
+
+    Unlike the GRU, both gates depend on the *input only* — there is no
+    ``h_{t-1}``-dependent nonlinearity — so the recurrence is linear in
+    the hidden state: ``h_t = a_t * h_{t-1} + b_t`` with
+    ``a = 1 - z, b = z * cand``.  First-order linear recurrences compose
+    associatively, which is exactly what makes the whole-trajectory unroll
+    a single fused `repro.kernels.recurrent_scan` call (log-depth
+    parallel scan; blocked Pallas kernel on TPU) instead of a sequential
+    per-step ``lax.scan``.  That is this core's reason to exist: same
+    ``(carry, inputs) -> (carry, outputs)`` contract as `ScannedRNN`,
+    drop-in behind any system's ``recurrent_core="linear"`` config, but
+    the BPTT hot path parallelises over time.
+
+    Episode-boundary resets fold into the decay coefficient inside the
+    fused scan (``a_t <- a_t * (1 - reset_t)``) — the kernel-side form of
+    the `reset_carry` rule; `step` applies the identical masking rule at
+    act time, so executor and trainer see one semantics.
+
+    Parameters are one fused input projection ``(in_dim, 2 * hidden_dim)``
+    (a `Dense`), split into the gate and candidate halves.
+    """
+
+    in_dim: int
+    hidden_dim: int
+
+    @property
+    def proj(self) -> Dense:
+        """The fused gate+candidate input projection layer."""
+        return Dense(self.in_dim, 2 * self.hidden_dim)
+
+    def init(self, key):
+        """Initialise the projection parameters."""
+        return {"proj": self.proj.init(key)}
+
+    def initial_carry(self, batch_shape=()):
+        """The zero hidden state, shaped ``(*batch_shape, hidden_dim)``."""
+        return jnp.zeros((*batch_shape, self.hidden_dim))
+
+    def _gates(self, params, x):
+        """Decay and forcing coefficients ``(a, b)`` for inputs ``x``."""
+        g = self.proj.apply(params["proj"], x)
+        z = jax.nn.sigmoid(g[..., : self.hidden_dim])
+        cand = jnp.tanh(g[..., self.hidden_dim :])
+        return 1.0 - z, z * cand
+
+    def step(self, params, carry, x, reset=None):
+        """One cell application: ``(carry, x) -> (new_carry, output)``.
+
+        Same signature and reset semantics as `ScannedRNN.step`; the
+        output at each step is the new hidden state.
+        """
+        a, b = self._gates(params, x)
+        if reset is not None:
+            a = a * (1.0 - reset[..., None].astype(a.dtype))
+        h = a * carry + b
+        return h, h
+
+    def unroll(self, params, carry, xs, resets=None):
+        """Fused whole-trajectory unroll (the associative-scan hot path).
+
+        Same contract as `ScannedRNN.unroll` — ``xs``: ``(T, ..., in_dim)``,
+        ``resets``: ``(T, ...)`` booleans, returns ``(final_carry,
+        outputs)`` — but instead of scanning `step` sequentially it
+        computes all gates in one batched projection and hands the
+        resulting linear recurrence to `repro.kernels.recurrent_scan`
+        (reset masking included, inside the kernel).
+        """
+        from repro.kernels.recurrent_scan import linear_recurrent_scan
+
+        a, b = self._gates(params, xs)
+        hs = linear_recurrent_scan(a, b, carry, resets)
+        return hs[-1], hs
+
+    def axes(self):
+        """Logical sharding axes (delegates to the projection layer)."""
+        return {"proj": self.proj.axes()}
+
+
+# The registry of memory cores selectable via the systems'
+# ``recurrent_core`` config field ("gru" is the reference path every seed
+# milestone is pinned on; "linear" is the fused associative-scan path).
+CORES = {"gru": ScannedRNN, "linear": LinearScannedRNN}
+
+
+def make_core(kind: str, in_dim: int, hidden_dim: int):
+    """Build a memory core by registry name (``"gru"`` or ``"linear"``)."""
+    try:
+        cls = CORES[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown recurrent core {kind!r}; choose from {sorted(CORES)}"
+        ) from None
+    return cls(in_dim, hidden_dim)
 
 
 def reset_carry(carry, reset, initial=None):

@@ -46,8 +46,8 @@ from repro.core.modules.communication import BroadcastedCommunication, dru
 from repro.core.system import System
 from repro.core.types import Carry, TrainState, Transition
 from repro.envs.api import StepType
-from repro.nn import MLP, ScannedRNN
-from repro.nn.recurrent import reset_carry, window_start_carry
+from repro.nn import MLP, LinearScannedRNN, ScannedRNN
+from repro.nn.recurrent import make_core, reset_carry, window_start_carry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +64,12 @@ class DialConfig:
     target_update_period: int = 20
     max_grad_norm: float = 10.0
     use_comm: bool = True  # False -> ablation: recurrent independent MADQN
+    # memory core behind the agents: "gru" (ScannedRNN reference — every
+    # seed milestone is pinned on it) or "linear" (fused associative-scan
+    # LinearScannedRNN). With the channel on, message feedback makes the
+    # trajectory inherently sequential, so only the act-time step changes;
+    # the no-comm ablation additionally re-runs BPTT as one fused unroll.
+    recurrent_core: str = "gru"
     # "dial": differentiable DRU channel (gradients flow between agents)
     # "rial": discrete message chosen eps-greedily from a message Q-head and
     #         trained by Q-learning (no cross-agent gradients) — the RIAL
@@ -78,7 +84,7 @@ class DialNets(NamedTuple):
     """The shared per-agent network stack (encoder -> memory core -> heads)."""
 
     encoder: MLP
-    core: ScannedRNN
+    core: ScannedRNN | LinearScannedRNN
     q_head: MLP
     msg_head: MLP
 
@@ -98,10 +104,15 @@ def make_dial(env, cfg: DialConfig = DialConfig()) -> System:
     msg_out = 2 * cfg.channel_size if rial else cfg.channel_size
     nets = DialNets(
         encoder=MLP((in_dim, cfg.hidden_dim), activate_final=True),
-        core=ScannedRNN(cfg.hidden_dim, cfg.hidden_dim),
+        core=make_core(cfg.recurrent_core, cfg.hidden_dim, cfg.hidden_dim),
         q_head=MLP((cfg.hidden_dim, cfg.hidden_dim, num_actions)),
         msg_head=MLP((cfg.hidden_dim, cfg.hidden_dim, msg_out)),
     )
+    # The channel feeds each step's messages into the next step's inputs,
+    # so with comm on the BPTT re-run is inherently sequential.  Without it
+    # (the rec-madqn ablation) inputs are the stored observations alone,
+    # and the fused core can unroll the whole window in one kernel call.
+    fused_bptt = (not cfg.use_comm) and (not rial) and cfg.recurrent_core != "gru"
     opt = optim.chain(
         optim.clip_by_global_norm(cfg.max_grad_norm),
         optim.adamw(cfg.learning_rate),
@@ -200,9 +211,32 @@ def make_dial(env, cfg: DialConfig = DialConfig()) -> System:
         no carries, so this is the documented zero start-state path). Ends
         with one bootstrap step on the final next-observation. Returns
         (qs, q_boot, msg_qs, msg_q_boot) — the msg outputs are {} for DIAL.
+
+        When the channel is off and the memory core is linear (the
+        ``fused_bptt`` condition above), there is no step-to-step message
+        feedback, so the whole window's inputs are known up front and the
+        re-run collapses to one fused ``core.unroll`` per agent (FIRST
+        rows folded into the scan as resets) instead of a sequential
+        per-step scan.
         """
         B = traj.discount.shape[1]
         carry0 = window_start_carry(traj.extras, initial_carry, (B,))
+
+        if fused_bptt:
+            first = traj.step_type == StepType.FIRST  # (T, B)
+            qs, q_boot = {}, {}
+            for a in ids:
+                z = nets.encoder.apply(params["encoder"], traj.obs[a])
+                h_fin, hs = nets.core.unroll(
+                    params["core"], carry0.hidden[a], z, resets=first
+                )
+                qs[a] = nets.q_head.apply(params["q_head"], hs)
+                # bootstrap step on the final next-obs (no reset row),
+                # matching the sequential path's trailing `cell` call
+                last_obs = traj.next_obs[a][-1]
+                qb, _, _ = agent_step(params, last_obs, _no_msg(last_obs), h_fin)
+                q_boot[a] = qb
+            return qs, q_boot, {}, {}
 
         def cell(carry, key, obs_t, msgs_t):
             """One re-run step: per-agent Q/message/hidden from a row."""

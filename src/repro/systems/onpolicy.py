@@ -16,8 +16,10 @@ Four variants from two axes:
   environment state (CTDE);
 * memory — the feed-forward variants (``ippo`` / ``mappo``) use plain MLP
   actors; the recurrent variants (``rec_ippo`` / ``rec_mappo``) put a
-  `repro.nn.ScannedRNN` GRU core between an MLP encoder and each head,
-  threading a typed `Carry` through the runners.  The paper's headline
+  memory core between an MLP encoder and each head (a `repro.nn.ScannedRNN`
+  GRU by default, or the fused-associative-scan `LinearScannedRNN` via
+  ``PPOConfig.recurrent_core="linear"``), threading a typed `Carry`
+  through the runners.  The paper's headline
   systems are the recurrent ones: on partially observable tasks
   (switch_game, speaker_listener, rware) a feed-forward policy is the
   wrong model class.
@@ -53,8 +55,8 @@ from repro.core.buffer import (
 from repro.core.system import System
 from repro.core.types import Carry, TrainState, Transition
 from repro.envs.api import EnvSpec, StepType
-from repro.nn import MLP, ScannedRNN
-from repro.nn.recurrent import window_start_carry
+from repro.nn import MLP
+from repro.nn.recurrent import make_core, window_start_carry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +69,14 @@ class PPOConfig:
     ``rollout_len * num_envs`` rows for the feed-forward variants and the
     ``num_envs`` sequence axis for the recurrent ones (clamped to the
     number of envs, so the single-env python loop still trains).
+
+    ``recurrent_core`` selects the memory core behind the recurrent
+    variants (ignored by the feed-forward ones): ``"gru"`` is the
+    `ScannedRNN` reference path every seed milestone is pinned on;
+    ``"linear"`` swaps in the gated-linear `LinearScannedRNN`, whose BPTT
+    unrolls run as one fused associative scan
+    (`repro.kernels.recurrent_scan` — the throughput path, see
+    docs/KERNELS.md).
     """
 
     hidden_sizes: Sequence[int] = (64, 64)
@@ -81,6 +91,7 @@ class PPOConfig:
     max_grad_norm: float = 0.5
     rollout_len: int = 128
     shared_weights: bool = True
+    recurrent_core: str = "gru"
     distributed_axis: str | None = None
 
 
@@ -351,11 +362,12 @@ def make_ppo_system(env, cfg: PPOConfig, centralised: bool, name: str) -> System
 
 
 def make_recurrent_ppo_networks(env, cfg: PPOConfig, centralised: bool):
-    """Build per-agent recurrent actor/critic stacks (encoder -> GRU -> head).
+    """Build per-agent recurrent actor/critic stacks (encoder -> core -> head).
 
     Each network is an MLP encoder over ``cfg.hidden_sizes`` (final layer
-    activated), a `ScannedRNN` GRU core of ``cfg.hidden_sizes[-1]`` units,
-    and a linear head.  Weights are shared across agents when the env is
+    activated), a memory core of ``cfg.hidden_sizes[-1]`` units selected
+    by ``cfg.recurrent_core`` (`ScannedRNN` GRU reference or the fused
+    `LinearScannedRNN`), and a linear head.  Weights are shared across agents when the env is
     homogeneous and ``cfg.shared_weights`` is set (hidden *state* is always
     per-agent).  Returns ``(ids, num_actions, init, actor, critic)`` where
     ``actor`` / ``critic`` each expose ``step`` (one env step) and
@@ -373,10 +385,10 @@ def make_recurrent_ppo_networks(env, cfg: PPOConfig, centralised: bool):
     critic_in = {a: (state_dim if centralised else obs_dims[a]) for a in ids}
 
     def stack(in_dim, out_dim):
-        """One encoder -> GRU core -> linear head network stack."""
+        """One encoder -> memory core -> linear head network stack."""
         return {
             "encoder": MLP((in_dim, *cfg.hidden_sizes), activate_final=True),
-            "core": ScannedRNN(hidden, hidden),
+            "core": make_core(cfg.recurrent_core, hidden, hidden),
             "head": MLP((hidden, out_dim)),
         }
 
