@@ -29,6 +29,9 @@ _SEEDVEC_KEYS = (
 _FUSED_RECURRENT_NUM_KEYS = (
     "reference_steps_per_sec", "fused_steps_per_sec", "speedup",
 )
+# the optional per-cell async actor/learner rung (repro.distributed.impala):
+# one row per actor count, throughput scaling with actor replicas
+_ASYNC_ROW_NUM_KEYS = ("num_actors", "steps_per_sec", "env_steps", "wall_seconds")
 # the provenance block (produced by repro.obs.record.provenance) required
 # on every artifact: string fields + the device count
 _PROVENANCE_STR_KEYS = (
@@ -54,6 +57,13 @@ FULL_MATRIX_ENVS = (
     "speaker_listener", "spread", "switch_game",
 )
 SPEED_SLICE_SYSTEMS = ("vdn", "ippo", "rec_ippo")
+# the checked-in async actor/learner coverage: every runnable speed-slice
+# cell must carry an async_actors rung at exactly these actor counts, and
+# at least MIN_ASYNC_MONOTONIC_CELLS of them must show steps/sec increasing
+# monotonically with actor count (the rung's whole point: throughput scales
+# with actor replicas instead of being bound by the lockstep scan)
+ASYNC_ACTOR_COUNTS = (1, 2, 4)
+MIN_ASYNC_MONOTONIC_CELLS = 2
 # the checked-in fused-recurrent coverage: the recurrent speed-slice system
 # must carry a fused_recurrent rung on the matrix game plus one gridworld,
 # so the rec/ff gap number stays comparable across PRs
@@ -237,6 +247,41 @@ def check_speed_schema(doc: Dict) -> List[str]:
             for k in _FUSED_RECURRENT_NUM_KEYS:
                 if not _num(fr.get(k)) or fr.get(k, 0) <= 0:
                     errs.append(f"{where}.fused_recurrent.{k} must be > 0")
+        aa = cell.get("async_actors")
+        if aa is not None:
+            errs.extend(_check_async_block(aa, where))
+    return errs
+
+
+def _check_async_block(aa, where: str) -> List[str]:
+    """Problems with one cell's ``async_actors`` block (docs/BENCH.md)."""
+    errs: List[str] = []
+    where = f"{where}.async_actors"
+    if not isinstance(aa, dict):
+        return [f"{where} must be an object"]
+    counts = aa.get("actor_counts")
+    if not isinstance(counts, list) or not all(_num(c) for c in counts):
+        errs.append(f"{where}.actor_counts must be a list of numbers")
+        counts = []
+    for k in ("param_sync_every", "unroll_len"):
+        if not _num(aa.get(k)) or aa.get(k, 0) < 1:
+            errs.append(f"{where}.{k} must be a number >= 1")
+    rows = aa.get("cells")
+    if not isinstance(rows, list) or len(rows) != len(counts):
+        errs.append(f"{where}.cells must be a list matching actor_counts")
+        return errs
+    for j, (count, row) in enumerate(zip(counts, rows)):
+        rwhere = f"{where}.cells[{j}]"
+        if not isinstance(row, dict):
+            errs.append(f"{rwhere} must be an object")
+            continue
+        if row.get("num_actors") != count:
+            errs.append(
+                f"{rwhere}.num_actors must equal actor_counts[{j}] ({count})"
+            )
+        for k in _ASYNC_ROW_NUM_KEYS:
+            if not _num(row.get(k)) or row.get(k, 0) <= 0:
+                errs.append(f"{rwhere}.{k} must be > 0")
     return errs
 
 
@@ -352,7 +397,11 @@ def check_speed_full_matrix(doc: Dict) -> List[str]:
 
     The checked-in ``BENCH_speed.json`` must carry a row per system in
     `SPEED_SLICE_SYSTEMS` (one replay, one on-policy, one recurrent
-    family), keeping the perf trajectory comparable across PRs.
+    family), keeping the perf trajectory comparable across PRs.  Every
+    runnable slice cell must additionally carry an ``async_actors`` rung
+    at exactly `ASYNC_ACTOR_COUNTS`, with at least
+    `MIN_ASYNC_MONOTONIC_CELLS` cells showing steps/sec monotonically
+    increasing with actor count.
     """
     errs = check_speed_schema(doc)
     cells = doc.get("cells")
@@ -373,6 +422,35 @@ def check_speed_full_matrix(doc: Dict) -> List[str]:
                     f"speed slice missing fused_recurrent rung for "
                     f"({FUSED_RECURRENT_SYSTEM}, {e})"
                 )
+        monotonic = 0
+        for c in cells:
+            if not (isinstance(c, dict) and c.get("compatible")):
+                continue
+            if c.get("system") not in SPEED_SLICE_SYSTEMS:
+                continue
+            aa = c.get("async_actors")
+            where = f"({c.get('system')}, {c.get('env')})"
+            if not isinstance(aa, dict):
+                errs.append(f"speed slice missing async_actors rung for {where}")
+                continue
+            if tuple(aa.get("actor_counts", ())) != ASYNC_ACTOR_COUNTS:
+                errs.append(
+                    f"{where}.async_actors.actor_counts must be "
+                    f"{list(ASYNC_ACTOR_COUNTS)}"
+                )
+                continue
+            sps = [row.get("steps_per_sec", 0) for row in aa.get("cells", [])]
+            if len(sps) == len(ASYNC_ACTOR_COUNTS) and all(
+                b > a for a, b in zip(sps, sps[1:])
+            ):
+                monotonic += 1
+        if monotonic < MIN_ASYNC_MONOTONIC_CELLS:
+            errs.append(
+                f"async_actors rung must scale monotonically over "
+                f"{list(ASYNC_ACTOR_COUNTS)} actors on >= "
+                f"{MIN_ASYNC_MONOTONIC_CELLS} speed-slice cells "
+                f"(got {monotonic})"
+            )
     return errs
 
 

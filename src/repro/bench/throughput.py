@@ -21,6 +21,12 @@ GRU `ScannedRNN` to the fused associative-scan `LinearScannedRNN`
 (``recurrent_core="linear"``), quantifying how much of the rec/ff
 throughput gap the fused core closes (see docs/KERNELS.md).
 
+Every cell also reports an ``async_actors`` rung: the IMPALA-style async
+actor/learner runner (`repro.distributed.impala.make_async`) at 1/2/4
+vmapped actor replicas, measuring how steps/sec scales with actor count
+when rollout collection is decoupled from the learner through the
+device-resident trajectory queue (see docs/DISTRIBUTED.md).
+
 All fused timings exclude compilation (warm call first); steps/sec counts
 *environment* steps summed over envs, devices and seeds.
 """
@@ -40,6 +46,7 @@ from repro.core.system import (
     make_distributed,
     run_environment_loop,
 )
+from repro.distributed.impala import make_async
 from repro.launch.mesh import make_auto_mesh
 from repro.obs import ConsoleSink, provenance
 from repro.systems.offpolicy import OffPolicyConfig
@@ -143,12 +150,12 @@ def measure_seed_vectorization(
     keys = [jax.random.key(s) for s in range(num_seeds)]
     serial_program = make_anakin(system, iterations, num_envs)
 
-    def serial_sweep(ks):
+    def _serial_sweep(ks):
         for k in ks:
             jax.block_until_ready(serial_program(k))
         return ()
 
-    serial_dt = _timed_warm(serial_sweep, keys)
+    serial_dt = _timed_warm(_serial_sweep, keys)
     vmapped_program = make_anakin(
         system, iterations, num_envs, num_seeds=num_seeds
     )
@@ -190,6 +197,58 @@ def measure_fused_recurrent(
         "reference_steps_per_sec": reference_steps_per_sec,
         "fused_steps_per_sec": fused["steps_per_sec"],
         "speedup": fused["steps_per_sec"] / reference_steps_per_sec,
+    }
+
+
+def measure_async_actors(
+    system_name: str,
+    env_name: str,
+    iterations: int,
+    num_envs: int,
+    overrides: dict,
+    actor_counts: Sequence[int] = (1, 2, 4),
+    param_sync_every: int = 1,
+) -> Dict:
+    """Async actor/learner throughput scaling with actor count.
+
+    One row per actor count: the same (system, env) cell trained by
+    `repro.distributed.impala.make_async` with N vmapped actor replicas
+    feeding the shared trajectory queue.  ``iterations`` counts env steps
+    per env *per actor* (the anakin iteration unit), so total env steps —
+    and the work available to amortise per-op overhead — grow with N;
+    steps/sec increasing down the rows is the IMPALA scaling claim at
+    single-host size.  On-policy systems run with ``use_vtrace=True``
+    (the correction the async runner needs whenever staleness > 0), so
+    the rung measures the production configuration.
+    """
+    entry = REGISTRY[system_name]
+    has_vtrace = "use_vtrace" in {
+        f.name for f in dataclasses.fields(entry.config_cls)
+    }
+    ov = {**overrides, "use_vtrace": True} if has_vtrace else dict(overrides)
+    _, system = make_pair(system_name, env_name, **ov)
+    rows = []
+    unroll = None
+    for num_actors in actor_counts:
+        program = make_async(
+            system, iterations, num_envs, num_actors,
+            param_sync_every=param_sync_every,
+        )
+        unroll = program.unroll_len
+        dt = _timed_warm(program, jax.random.key(0))
+        steps = iterations * num_envs * num_actors
+        rows.append({
+            "num_actors": int(num_actors),
+            "steps_per_sec": steps / dt,
+            "env_steps": steps,
+            "wall_seconds": dt,
+        })
+    return {
+        "actor_counts": [int(a) for a in actor_counts],
+        "param_sync_every": int(param_sync_every),
+        "unroll_len": int(unroll),
+        "use_vtrace": has_vtrace,
+        "cells": rows,
     }
 
 
@@ -256,6 +315,9 @@ def bench_cell(
             system, num_seeds, iterations, num_envs
         ),
         **({"fused_recurrent": fused} if fused is not None else {}),
+        "async_actors": measure_async_actors(
+            system_name, env_name, iterations, num_envs, overrides
+        ),
     }
 
 
@@ -306,6 +368,10 @@ def run_bench(
             sv = cell["seed_vectorization"]
             fr = cell.get("fused_recurrent")
             fused_note = f"fused core={fr['speedup']:.1f}x  " if fr else ""
+            aa = cell["async_actors"]
+            async_note = "async " + "/".join(
+                f"{row['steps_per_sec']:,.0f}" for row in aa["cells"]
+            ) + f" @ {aa['actor_counts']} actors  "
             _console.line(
                 f"{sys_name:>10s} x {env_name:<18s}: "
                 f"loop={cell['runners']['python_loop']['steps_per_sec']:,.0f} "
@@ -313,6 +379,7 @@ def run_bench(
                 f"shard_map={cell['runners']['shard_map']['steps_per_sec']:,.0f} steps/s  "
                 f"{sv['num_seeds']}-seed vmap speedup={sv['speedup']:.1f}x  "
                 f"{fused_note}"
+                f"{async_note}"
                 f"({time.perf_counter() - t0:.1f}s)"
             )
 
@@ -337,16 +404,19 @@ def to_markdown(results: Dict) -> str:
         "steps over all envs/devices/seeds; `vmap speedup` is serial "
         "per-seed training vs one vmapped multi-seed jit; `fused core` is "
         "anakin with the linear associative-scan memory core vs the "
-        "reference GRU (recurrent systems only, see docs/KERNELS.md).",
+        "reference GRU (recurrent systems only, see docs/KERNELS.md); "
+        "`async actors` is the IMPALA-style async actor/learner runner's "
+        "steps/sec at 1/2/4 actor replicas (see docs/DISTRIBUTED.md).",
         "",
         "| system | env | python loop (steps/s) | anakin (steps/s) | "
-        "shard_map (steps/s) | vmap speedup | fused core |",
-        "|---|---|---|---|---|---|---|",
+        "shard_map (steps/s) | vmap speedup | fused core | async actors |",
+        "|---|---|---|---|---|---|---|---|",
     ]
     for cell in results["cells"]:
         if not cell.get("compatible"):
             lines.append(
-                f"| {cell['system']} | {cell['env']} | -- | -- | -- | -- | -- |"
+                f"| {cell['system']} | {cell['env']} | -- | -- | -- | -- | -- "
+                "| -- |"
             )
             continue
         r, sv = cell["runners"], cell["seed_vectorization"]
@@ -355,6 +425,12 @@ def to_markdown(results: Dict) -> str:
             f"{fr['fused_steps_per_sec']:,.0f} ({fr['speedup']:.1f}x)"
             if fr else "--"
         )
+        aa = cell.get("async_actors")
+        async_col = (
+            " / ".join(f"{row['steps_per_sec']:,.0f}" for row in aa["cells"])
+            + f" @ {'/'.join(str(a) for a in aa['actor_counts'])}"
+            if aa else "--"
+        )
         lines.append(
             f"| {cell['system']} | {cell['env']} "
             f"| {r['python_loop']['steps_per_sec']:,.0f} "
@@ -362,6 +438,7 @@ def to_markdown(results: Dict) -> str:
             f"({r['anakin']['speedup_vs_loop']:.0f}x) "
             f"| {r['shard_map']['steps_per_sec']:,.0f} "
             f"| {sv['speedup']:.1f}x @ {sv['num_seeds']} seeds "
-            f"| {fused_col} |"
+            f"| {fused_col} "
+            f"| {async_col} |"
         )
     return "\n".join(lines) + "\n"

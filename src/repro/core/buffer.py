@@ -109,3 +109,94 @@ def rollout_take(state: RolloutState):
 def rollout_reset(state: RolloutState) -> RolloutState:
     """Consume: rewind the cursor (storage is overwritten in place)."""
     return RolloutState(storage=state.storage, t=jnp.zeros((), jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# Device-resident trajectory queue: the third structure of the experience
+# protocol, used by the async actor/learner runner
+# (`repro.distributed.impala`). Where the replay table and the rollout
+# accumulator are *datasets* (owned by the learner), the queue is a
+# *transport*: a fixed-capacity FIFO ring of trajectory-chunk slots that
+# decouples actor production from learner consumption inside one fused jit.
+# Items are arbitrary pytrees (a time-major Transition chunk plus update
+# keys and staleness metadata); push to a full queue drops the incoming
+# item (the runner counts drops), pop of an empty queue is gated by the
+# caller on `queue_size`.
+
+
+class QueueState(NamedTuple):
+    """A fixed-capacity FIFO ring of pytree slots, fully device-resident."""
+
+    storage: Any          # pytree, leaves (capacity, ...) — one slot per item
+    head: jnp.ndarray     # () int32 — slot index of the oldest queued item
+    size: jnp.ndarray     # () int32 — number of items currently queued
+
+
+def queue_init(example_item, capacity: int) -> QueueState:
+    """A fresh empty queue; ``example_item`` fixes slot shapes and dtypes."""
+    storage = jax.tree_util.tree_map(
+        lambda x: jnp.zeros((capacity,) + jnp.shape(x), jnp.asarray(x).dtype),
+        example_item,
+    )
+    return QueueState(
+        storage=storage,
+        head=jnp.zeros((), jnp.int32),
+        size=jnp.zeros((), jnp.int32),
+    )
+
+
+def queue_capacity(state: QueueState) -> int:
+    """The static number of slots the queue was built with."""
+    return jax.tree_util.tree_leaves(state.storage)[0].shape[0]
+
+
+def queue_size(state: QueueState):
+    """How many items are currently queued (a traced scalar)."""
+    return state.size
+
+
+def queue_push(state: QueueState, item):
+    """Enqueue one item at the tail; a full queue drops the *incoming* item.
+
+    Returns ``(state, accepted)`` where ``accepted`` is a scalar bool —
+    False means the item was dropped (bounded-queue backpressure; the
+    async runner surfaces the drop count in its telemetry).
+    """
+    capacity = queue_capacity(state)
+    ok = state.size < capacity
+    slot = (state.head + state.size) % capacity
+    storage = jax.tree_util.tree_map(
+        lambda s, x: s.at[slot].set(
+            jnp.where(ok, x.astype(s.dtype), s[slot])
+        ),
+        state.storage,
+        item,
+    )
+    return (
+        QueueState(
+            storage=storage,
+            head=state.head,
+            size=state.size + ok.astype(jnp.int32),
+        ),
+        ok,
+    )
+
+
+def queue_pop(state: QueueState):
+    """Dequeue the oldest item (FIFO).
+
+    Returns ``(state, item)``.  Popping an empty queue returns the stale
+    contents of the head slot and leaves the queue empty — callers gate on
+    `queue_size` (the async runner wraps every pop in a ``lax.cond``).
+    """
+    capacity = queue_capacity(state)
+    has = state.size > 0
+    item = jax.tree_util.tree_map(lambda s: s[state.head], state.storage)
+    return (
+        QueueState(
+            storage=state.storage,
+            head=jnp.where(has, (state.head + 1) % capacity, state.head),
+            size=state.size - has.astype(jnp.int32),
+        ),
+        item,
+    )

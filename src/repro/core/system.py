@@ -168,31 +168,33 @@ def run_environment_loop(
 # ------------------------------------------------------------ Anakin runner
 
 
-def _step_phase(system: System, tenv, st: SystemState, key):
-    """Everything in one iteration *except* the trainer update.
+def _act_phase(system: System, tenv, train, env_state, timestep, carry, key):
+    """One vectorised acting step under ``train``'s policy — no dataset write.
 
-    ``tenv`` is the wrapper stack from `_training_env`: `AutoReset` fuses
-    episode boundaries into the step (a terminated env returns the FIRST
-    timestep of its next episode, carrying the terminal reward/discount)
-    and `EpisodeStats` accumulates completed-episode returns — so the
-    runner has no reset plumbing of its own.  Auto-reset randomness is
-    refreshed from the runner key every iteration, keeping training a
-    reproducible function of the runner key alone.
+    The executor half of an iteration: refresh auto-reset randomness from
+    the runner key, select actions, step every env, assemble the resulting
+    `Transition` batch and zero executor carries at auto-reset FIRST
+    boundaries (the memory-core protocol's one reset-masking rule).
 
-    Returns (SystemState with the *old* train state, update key, metrics);
-    the callers own the update gate so the seed-vectorized runner can hoist
-    it out of the lane axis (see `_one_iteration_seeds`).
+    This is the exact acting computation `_step_phase` wraps; the async
+    actor/learner runner (`repro.distributed.impala`) replays it verbatim
+    with a *snapshot* train state, which is what makes the staleness-0
+    async run bitwise-reproduce anakin's update sequence.
+
+    Returns ``(env_state, timestep, carry, next_key, transition, k_upd,
+    metrics)`` — ``k_upd`` is the update key this step would use if its
+    transition completes a batch (the callers own the update gate).
     """
     key, k_act, k_upd, k_reset = jax.random.split(key, 4)
-    num_envs = jax.tree_util.tree_leaves(st.env_state)[0].shape[0]
+    num_envs = jax.tree_util.tree_leaves(env_state)[0].shape[0]
     env_state = replace_reset_keys(
-        st.env_state, jax.random.split(k_reset, num_envs)
+        env_state, jax.random.split(k_reset, num_envs)
     )
 
-    obs = st.timestep.observation
+    obs = timestep.observation
     gs = jax.vmap(tenv.global_state)(env_state)
     actions, new_carry, extras = system.select_actions(
-        st.train, obs, gs, st.carry, k_act, training=True
+        train, obs, gs, carry, k_act, training=True
     )
     new_env_state, new_ts = jax.vmap(tenv.step)(env_state, actions)
     tr = Transition(
@@ -204,13 +206,11 @@ def _step_phase(system: System, tenv, st: SystemState, key):
         state=gs,
         next_state=jax.vmap(tenv.global_state)(new_env_state),
         extras=extras,
-        step_type=st.timestep.step_type,
+        step_type=timestep.step_type,
     )
-    buffer = system.observe(st.buffer, tr)
 
     # a FIRST out of step marks an auto-reset boundary: executor carries
-    # (recurrent cores, comm messages) restart with the new episode, via
-    # the memory-core protocol's one reset-masking rule
+    # (recurrent cores, comm messages) restart with the new episode
     done = new_ts.step_type == StepType.FIRST
     new_carry = reset_carry(
         new_carry, done, initial=system.initial_carry((num_envs,))
@@ -227,7 +227,31 @@ def _step_phase(system: System, tenv, st: SystemState, key):
         "done_frac": jnp.mean(done_f),
         "episode_return": ep_return,
     }
-    st = SystemState(st.train, buffer, new_env_state, new_ts, new_carry, key)
+    return new_env_state, new_ts, new_carry, key, tr, k_upd, metrics
+
+
+def _step_phase(system: System, tenv, st: SystemState, key):
+    """Everything in one iteration *except* the trainer update.
+
+    ``tenv`` is the wrapper stack from `_training_env`: `AutoReset` fuses
+    episode boundaries into the step (a terminated env returns the FIRST
+    timestep of its next episode, carrying the terminal reward/discount)
+    and `EpisodeStats` accumulates completed-episode returns — so the
+    runner has no reset plumbing of its own.  Auto-reset randomness is
+    refreshed from the runner key every iteration, keeping training a
+    reproducible function of the runner key alone.
+
+    Acting is `_act_phase`; this wrapper adds the dataset write
+    (``system.observe``).  Returns (SystemState with the *old* train
+    state, update key, metrics); the callers own the update gate so the
+    seed-vectorized runner can hoist it out of the lane axis (see
+    `_one_iteration_seeds`).
+    """
+    env_state, ts, carry, key, tr, k_upd, metrics = _act_phase(
+        system, tenv, st.train, st.env_state, st.timestep, st.carry, key
+    )
+    buffer = system.observe(st.buffer, tr)
+    st = SystemState(st.train, buffer, env_state, ts, carry, key)
     return st, k_upd, metrics
 
 
@@ -568,6 +592,17 @@ def make_distributed(
     `make_anakin`; under shard_map the callback fires per device shard, so
     the host tap sees each executor's local metrics (callers that want one
     line per emission should aggregate in their logger).
+
+    Like `make_anakin`, the program is split into an init jit and a
+    training jit (``program.init_fn`` / ``program.fused``), so repeat
+    calls — the benchmark's timed calls in particular — re-run only the
+    training scan.  The earlier one-jit form re-built every device's
+    SystemState inside each call, which is why committed BENCH_speed
+    tables showed shard_map trailing anakin on some cells (see
+    docs/DISTRIBUTED.md).  Unlike anakin's fused jit the training jit is
+    *not* donated: its outputs are reductions (replicated params + mean
+    metrics), so there are no output buffers the state could alias —
+    donation would only produce "unusable donation" warnings.
     """
     from jax.experimental.shard_map import shard_map
 
@@ -586,9 +621,17 @@ def make_distributed(
 
     tapping = log_every > 0 and log_callback is not None
 
-    def per_device(dev_keys):
-        k = dev_keys[0]
-        st = init_system_state(system, k, num_envs_per_device, train_env=tenv)
+    def per_device_init(dev_keys):
+        st = init_system_state(
+            system, dev_keys[0], num_envs_per_device, train_env=tenv
+        )
+        # every leaf gains a leading per-device axis of 1 so the state can
+        # cross the shard_map boundary sharded on the data axis (scalars
+        # included — P(axis) cannot shard a rank-0 leaf)
+        return jax.tree_util.tree_map(lambda x: x[None], _unalias(st))
+
+    def per_device_run(st_batched):
+        st = jax.tree_util.tree_map(lambda x: x[0], st_batched)
 
         def _iterate(st):
             return _one_iteration(system, tenv, st, st.key)
@@ -615,10 +658,19 @@ def make_distributed(
             out = out + (jnp.mean(ev.episode_return)[None],)
         return out
 
-    out_specs = (P(), P(axis)) if eval_fn is None else (P(), P(axis), P(axis))
-    fn = jax.jit(
+    init_fn = jax.jit(
         shard_map(
-            per_device,
+            per_device_init,
+            mesh=mesh,
+            in_specs=(P(axis),),
+            out_specs=P(axis),
+            check_rep=False,
+        )
+    )
+    out_specs = (P(), P(axis)) if eval_fn is None else (P(), P(axis), P(axis))
+    fused = jax.jit(
+        shard_map(
+            per_device_run,
             mesh=mesh,
             in_specs=(P(axis),),
             out_specs=out_specs,
@@ -627,8 +679,10 @@ def make_distributed(
     )
 
     def program(key):
-        return fn(jax.random.split(key, n_dev))
+        return fused(init_fn(jax.random.split(key, n_dev)))
 
+    program.fused = fused
+    program.init_fn = init_fn
     return program
 
 

@@ -1,13 +1,38 @@
+"""Distribution subsystem: logical-axis sharding + the async runner.
+
+Two halves (see docs/DISTRIBUTED.md):
+
+* `repro.distributed.sharding` — the logical-axis rule tables and mesh
+  helpers that map model/runner annotations ("batch", "actors", ...) to
+  physical mesh axes;
+* `repro.distributed.impala` — the IMPALA-style async actor/learner
+  runner (`make_async` / `train_async`), the fourth runner scale after
+  python-loop / anakin / shard_map.
+"""
+from repro.distributed.impala import (
+    ActorState,
+    AsyncState,
+    default_unroll_len,
+    make_async,
+    train_async,
+)
 from repro.distributed.sharding import (
     DEFAULT_RULES,
+    enter_mesh,
     logical_to_spec,
     tree_shardings,
     with_logical_constraint,
 )
 
 __all__ = [
+    "ActorState",
+    "AsyncState",
     "DEFAULT_RULES",
+    "default_unroll_len",
+    "enter_mesh",
     "logical_to_spec",
+    "make_async",
+    "train_async",
     "tree_shardings",
     "with_logical_constraint",
 ]

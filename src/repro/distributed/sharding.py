@@ -19,6 +19,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 # over ("pod","data") when a pod axis exists.
 DEFAULT_RULES: Dict[str, object] = {
     "batch": ("pod", "data"),  # activations' batch dim
+    "actors": ("pod", "data"),  # async runner's actor-replica lane axis
     "seq": None,
     "vocab": "model",
     "heads": "model",
@@ -54,6 +55,7 @@ PROFILES: Dict[str, Dict[str, object]] = {
 
 
 def rules_for(profile: str) -> Dict[str, object]:
+    """The rule table registered under ``profile`` (see `PROFILES`)."""
     return PROFILES[profile]
 
 
@@ -64,6 +66,9 @@ _ACTIVE_RULES: list = [DEFAULT_RULES]
 
 
 class set_active_rules:
+    """Context manager installing a rule table (by dict or profile name)
+    as the ambient rules `with_logical_constraint` reads by default."""
+
     def __init__(self, rules):
         self.rules = rules if isinstance(rules, dict) else rules_for(rules)
 
@@ -77,6 +82,7 @@ class set_active_rules:
 
 
 def active_rules() -> Dict[str, object]:
+    """The innermost rule table installed by `set_active_rules`."""
     return _ACTIVE_RULES[-1]
 
 

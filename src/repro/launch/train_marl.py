@@ -8,6 +8,10 @@ by picking a runner:
   --runner loop     the paper's Block-1 python environment loop (faithful)
   --runner anakin   fused jit: scan(steps) x vmap(num_envs)
   --runner sharded  shard_map over the mesh data axis (num_executors devices)
+  --runner async    IMPALA-style async actor/learner: --num-actors vmapped
+                    actor replicas feed a device-resident trajectory queue,
+                    the learner consumes with --param-sync-every bounded
+                    staleness (see docs/DISTRIBUTED.md)
 
 Action-space compatibility is spec-driven: each registry entry declares
 discrete/continuous support and the env's spec is checked against it (a
@@ -42,6 +46,7 @@ from repro.core.system import (
     run_environment_loop,
     train_distributed,
 )
+from repro.distributed.impala import default_unroll_len, train_async
 from repro.envs import REGISTRY as ENVS
 from repro.obs import (
     ConsoleSink,
@@ -65,10 +70,24 @@ def parse_args(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--system", choices=sorted(SYSTEMS), default="madqn")
     p.add_argument("--env", choices=sorted(ENVS), default="smax_lite")
-    p.add_argument("--runner", choices=("loop", "anakin", "sharded"), default="anakin")
+    p.add_argument(
+        "--runner", choices=("loop", "anakin", "sharded", "async"),
+        default="anakin",
+    )
     p.add_argument("--iterations", type=int, default=2000)
     p.add_argument("--num-envs", type=int, default=16)
     p.add_argument("--num-executors", type=int, default=2, help="devices (sharded)")
+    p.add_argument(
+        "--num-actors", type=int, default=2,
+        help="async: actor replicas feeding the trajectory queue "
+        "(--iterations counts env steps per env per actor and must divide "
+        "into the system's unroll length)",
+    )
+    p.add_argument(
+        "--param-sync-every", type=int, default=1,
+        help="async: refresh the actors' param snapshot every N learner "
+        "ticks (1 = every tick; staleness stays < N)",
+    )
     p.add_argument(
         "--num-seeds", type=int, default=0,
         help="anakin: train N independent seeds as one vmapped jit "
@@ -145,9 +164,16 @@ def run(args) -> None:
     tap = None
     if args.log_every > 0 and args.runner != "loop":
         stream_logger = SeedAggregator(logger) if num_seeds else logger
+        # the async runner's scan unit is one learner tick (= unroll_len
+        # acting steps on each of num_actors replicas), not one env step
+        steps_per_iteration = (
+            default_unroll_len(system) * args.num_envs * args.num_actors
+            if args.runner == "async"
+            else args.num_envs * (num_seeds or 1)
+        )
         tap = MetricTap(
             stream_logger, args.log_every,
-            steps_per_iteration=args.num_envs * (num_seeds or 1),
+            steps_per_iteration=steps_per_iteration,
         )
 
     trace_ctx = contextlib.nullcontext({})
@@ -209,6 +235,48 @@ def run(args) -> None:
                     {"reward_first10pct": final_metrics["reward_first10pct"],
                      "reward_last10pct": final_metrics["reward_last10pct"]}
                 )
+            elif args.runner == "async":
+                if tap is not None:
+                    tap.reset_clock()
+                # inside the runner log_every counts learner ticks (the async
+                # scan unit), but the CLI flag is denominated in iterations
+                # like every other runner: convert, emitting at least as
+                # often as one tap per run
+                log_every_ticks = (
+                    max(1, args.log_every // default_unroll_len(system))
+                    if args.log_every > 0
+                    else 0
+                )
+                st, metrics = train_async(
+                    system, key, args.iterations, args.num_envs,
+                    args.num_actors,
+                    param_sync_every=args.param_sync_every,
+                    log_every=log_every_ticks,
+                    log_callback=tap,
+                )
+                final_train = st.train
+                r = np.asarray(metrics["reward"])
+                k = max(r.shape[-1] // 10, 1)
+                final_metrics["reward_first10pct"] = float(r[..., :k].mean())
+                final_metrics["reward_last10pct"] = float(r[..., -k:].mean())
+                # the async runner's own telemetry: queue pressure and the
+                # actual staleness of what the learner consumed
+                final_metrics["num_actors"] = args.num_actors
+                final_metrics["param_sync_every"] = args.param_sync_every
+                final_metrics["queue_depth_mean"] = float(
+                    np.mean(metrics["queue_depth"])
+                )
+                final_metrics["staleness_mean"] = float(
+                    np.mean(metrics["staleness"])
+                )
+                final_metrics["dropped_chunks"] = float(metrics["dropped"][-1])
+                console.write(
+                    {"reward_first10pct": final_metrics["reward_first10pct"],
+                     "reward_last10pct": final_metrics["reward_last10pct"],
+                     "queue_depth_mean": final_metrics["queue_depth_mean"],
+                     "staleness_mean": final_metrics["staleness_mean"],
+                     "dropped_chunks": final_metrics["dropped_chunks"]}
+                )
             else:
                 from repro.launch.mesh import make_auto_mesh
 
@@ -236,6 +304,14 @@ def run(args) -> None:
                     final_metrics["per_executor_eval_return"] = ev.tolist()
         wall = time.perf_counter() - t0
 
+    if args.runner == "async":
+        # wall-clock throughput split per actor replica (compile included;
+        # the BENCH_speed async_actors rung reports the steady-state number)
+        total_steps = args.iterations * args.num_envs * args.num_actors
+        final_metrics["steps_per_sec"] = total_steps / wall
+        final_metrics["per_actor_steps_per_sec"] = (
+            total_steps / wall / args.num_actors
+        )
     console.line(
         f"wall time: {wall:.1f}s  "
         f"({args.system} on {args.env}, runner={args.runner})"

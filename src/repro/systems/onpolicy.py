@@ -57,6 +57,7 @@ from repro.core.types import Carry, TrainState, Transition
 from repro.envs.api import EnvSpec, StepType
 from repro.nn import MLP
 from repro.nn.recurrent import make_core, window_start_carry
+from repro.systems.vtrace import vtrace_advantages
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,6 +78,17 @@ class PPOConfig:
     unrolls run as one fused associative scan
     (`repro.kernels.recurrent_scan` — the throughput path, see
     docs/KERNELS.md).
+
+    ``use_vtrace`` swaps GAE for V-trace off-policy corrected advantages
+    (`repro.systems.vtrace`), re-evaluating values and log-probs under the
+    *current* params and importance-weighting against the stored behaviour
+    log-probs — required for correctness when trajectories are collected
+    by stale-snapshot actors (the async runner with
+    ``param_sync_every > 1``, see docs/DISTRIBUTED.md); a no-op
+    generalisation of GAE when behaviour == current (exact at
+    ``gae_lambda = 1``).  ``vtrace_clip_rho`` / ``vtrace_clip_c`` are the
+    IMPALA truncation levels for the importance ratios and the trace
+    coefficients.
     """
 
     hidden_sizes: Sequence[int] = (64, 64)
@@ -93,6 +105,9 @@ class PPOConfig:
     shared_weights: bool = True
     recurrent_core: str = "gru"
     distributed_axis: str | None = None
+    use_vtrace: bool = False
+    vtrace_clip_rho: float = 1.0
+    vtrace_clip_c: float = 1.0
 
 
 def _make_gae(cfg: PPOConfig, ids):
@@ -260,18 +275,42 @@ def make_ppo_system(env, cfg: PPOConfig, centralised: bool, name: str) -> System
         return total, metrics
 
     def update(train: TrainState, buffer, key):
-        """Consume the rollout: GAE, then epochs of shuffled minibatches."""
+        """Consume the rollout: GAE or V-trace, then epochs of minibatches."""
         traj: Transition = rollout_take(buffer)  # leaves (T, B, ...)
-        # Bootstrap from the final next-observation. Params are unchanged
-        # since the rollout began (on-policy: no update fired mid-rollout),
-        # so these are behaviour values, exactly as if recorded at act time.
+        # Bootstrap from the final next-observation with the learner's
+        # current params.  Under the synchronous runners these equal the
+        # behaviour params (no update fired mid-rollout), so GAE sees
+        # behaviour values exactly as if recorded at act time; under the
+        # async runner with staleness they differ, and the V-trace branch
+        # re-evaluates the whole trajectory under current params and
+        # importance-corrects against the stored behaviour log-probs.
         last_obs = jax.tree_util.tree_map(lambda x: x[-1], traj.next_obs)
         last_state = traj.next_state[-1]
         last_values = {
             a: value_fn(train.params, a, critic_obs(last_obs, last_state, a))
             for a in ids
         }
-        adv, ret = gae(traj, last_values)
+        if cfg.use_vtrace:
+            adv, ret = {}, {}
+            disc = traj.discount * cfg.gamma
+            for a in ids:
+                lp_all = jax.nn.log_softmax(
+                    logits_fn(train.params, a, traj.obs[a])
+                )
+                curr_lp = jnp.take_along_axis(
+                    lp_all, traj.actions[a][..., None], axis=-1
+                )[..., 0]
+                curr_v = value_fn(
+                    train.params, a, critic_obs(traj.obs, traj.state, a)
+                )
+                adv[a], ret[a] = vtrace_advantages(
+                    curr_lp, traj.extras["logp"][a], curr_v, last_values[a],
+                    traj.rewards[a], disc,
+                    clip_rho=cfg.vtrace_clip_rho, clip_c=cfg.vtrace_clip_c,
+                    lam=cfg.gae_lambda,
+                )
+        else:
+            adv, ret = gae(traj, last_values)
         T, B = traj.discount.shape
         data = dict(
             obs=traj.obs,
@@ -546,9 +585,9 @@ def make_recurrent_ppo_system(env, cfg: PPOConfig, centralised: bool, name: str)
         # the just-started episode is gated out of GAE entirely.
         last_obs = jax.tree_util.tree_map(lambda x: x[-1], traj.next_obs)
         last_state = traj.next_state[-1]
-        last_values = {}
+        last_values, curr_values = {}, {}
         for a in ids:
-            h_t, _ = critic.unroll(
+            h_t, v_seq = critic.unroll(
                 train.params, a, carry0.hidden["critic"][a],
                 critic_obs(traj.obs, traj.state, a), resets,
             )
@@ -556,7 +595,29 @@ def make_recurrent_ppo_system(env, cfg: PPOConfig, centralised: bool, name: str)
                 train.params, a, h_t, critic_obs(last_obs, last_state, a)
             )
             last_values[a] = v[..., 0]
-        adv, ret = gae(traj, last_values)
+            curr_values[a] = v_seq[..., 0]
+        if cfg.use_vtrace:
+            # off-policy correction for stale-snapshot actors: current
+            # log-probs from an actor BPTT re-run over the stored window,
+            # current values from the critic unroll above
+            adv, ret = {}, {}
+            disc = traj.discount * cfg.gamma
+            for a in ids:
+                _, lg = actor.unroll(
+                    train.params, a, carry0.hidden["actor"][a],
+                    traj.obs[a], resets,
+                )
+                curr_lp = jnp.take_along_axis(
+                    jax.nn.log_softmax(lg), traj.actions[a][..., None], axis=-1
+                )[..., 0]
+                adv[a], ret[a] = vtrace_advantages(
+                    curr_lp, traj.extras["logp"][a], curr_values[a],
+                    last_values[a], traj.rewards[a], disc,
+                    clip_rho=cfg.vtrace_clip_rho, clip_c=cfg.vtrace_clip_c,
+                    lam=cfg.gae_lambda,
+                )
+        else:
+            adv, ret = gae(traj, last_values)
 
         data = dict(
             obs=traj.obs,

@@ -1,0 +1,76 @@
+"""V-trace off-policy corrected returns (IMPALA, Espeholt et al. 2018).
+
+The async actor/learner runner (`repro.distributed.impala`) lets actors
+collect trajectories under a *stale* parameter snapshot while the learner
+has already moved on — so the on-policy PPO family's GAE, which assumes
+behaviour == target policy, is biased whenever ``param_sync_every > 1``.
+V-trace repairs this with truncated importance sampling: per-step ratios
+``rho_t = min(clip_rho, pi(a_t|x_t) / mu(a_t|x_t))`` correct each TD
+error toward the *current* policy's value, and trace coefficients
+``c_t = lam * min(clip_c, rho_t)`` decay how far corrections propagate
+backwards:
+
+    vs_t - V(x_t) = delta_t + d_t * c_t * (vs_{t+1} - V(x_{t+1}))
+    delta_t       = rho_t * (r_t + d_t * V(x_{t+1}) - V(x_t))
+
+with ``d_t`` the discounted continuation (``gamma * discount_t``).  The
+value targets are ``vs_t``; the policy-gradient advantages are
+``rho_t * (r_t + d_t * vs_{t+1} - V(x_t))``.
+
+On-policy (``rho = c = 1``) with ``lam = 1`` both reduce exactly to this
+repo's GAE advantages and returns (`repro.systems.onpolicy._make_gae`) —
+the equivalence is pinned by ``tests/test_async.py``, which anchors the
+implementation without any reference code.  With ``lam < 1`` the trace
+decay enters the recursion through ``c_t`` (the standard IMPALA
+``lambda_`` knob), which differs from GAE's placement of ``lam`` by a
+single-step bootstrap term, so exact equivalence is a ``lam = 1``
+statement only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def vtrace_advantages(
+    curr_logp,
+    behaviour_logp,
+    values,
+    last_value,
+    rewards,
+    discounts,
+    clip_rho: float = 1.0,
+    clip_c: float = 1.0,
+    lam: float = 1.0,
+):
+    """V-trace policy-gradient advantages and value targets.
+
+    All per-step inputs are time-major ``(T, B)`` arrays for one agent:
+    ``curr_logp`` / ``behaviour_logp`` the log-probability of the taken
+    action under the current (learner) and behaviour (actor snapshot)
+    policies, ``values`` the *current* critic's V(x_t), ``last_value`` the
+    ``(B,)`` bootstrap V(x_T), ``rewards`` the agent's rewards and
+    ``discounts`` the discounted continuation ``gamma * discount_t``
+    (zero at terminal rows, which gates bootstrapping exactly as in GAE).
+
+    Returns ``(pg_advantages, vs)`` — feed the first (normalised) to the
+    policy loss and the second to the value loss, in the positions GAE's
+    ``(adv, ret)`` occupy.
+    """
+    rho = jnp.minimum(clip_rho, jnp.exp(curr_logp - behaviour_logp))
+    c = lam * jnp.minimum(clip_c, jnp.exp(curr_logp - behaviour_logp))
+    v_next = jnp.concatenate([values[1:], last_value[None]], axis=0)
+    delta = rho * (rewards + discounts * v_next - values)
+
+    def back(err_next, inp):
+        delta_t, d_t, c_t = inp
+        err_t = delta_t + d_t * c_t * err_next
+        return err_t, err_t
+
+    _, errors = jax.lax.scan(
+        back, jnp.zeros_like(last_value), (delta, discounts, c), reverse=True
+    )
+    vs = values + errors
+    vs_next = jnp.concatenate([vs[1:], last_value[None]], axis=0)
+    pg_adv = rho * (rewards + discounts * vs_next - values)
+    return pg_adv, vs
