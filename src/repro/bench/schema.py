@@ -50,7 +50,7 @@ _RUN_RETRACE_KEYS = ("jaxpr_traces", "backend_compiles", "compile_seconds")
 # lands in the committed matrix fails `--full` validation.
 FULL_MATRIX_SYSTEMS = (
     "dial", "ippo", "mad4pg", "maddpg", "madqn", "madqn-fp", "mappo",
-    "qmix", "rec_ippo", "rec_mappo", "rial", "vdn",
+    "qmix", "rec_ippo", "rec_madqn", "rec_mappo", "rial", "vdn",
 )
 FULL_MATRIX_ENVS = (
     "lbf", "matrix_game", "robot_warehouse", "smax_lite",

@@ -1,10 +1,18 @@
 """On-device replay tables — the Reverb replacement (see DESIGN.md §3).
 
 Fixed-capacity circular storage as a pytree of arrays with a functional
-add/sample API, so the whole table lives in the training jit. Supports the
-FIFO overwrite discipline of a bounded Reverb table and uniform sampling;
-a trajectory variant stores fixed-length sequences for recurrent systems
-(R2D2-style MADQN, DIAL).
+add/sample API, so the whole table lives in the training jit. Four
+structures share the idiom:
+
+* `BufferState` — the flat per-step replay table (FIFO overwrite,
+  uniform sampling) behind the feed-forward off-policy family;
+* `RolloutState` — the on-policy time-major rollout accumulator
+  (consume-and-reset);
+* `SeqBufferState` — the sequence-replay table for *recurrent* off-policy
+  systems (R2D2-style): fixed-length time-major windows cut from the
+  incoming step stream with overlap striding, FIFO overwrite over whole
+  windows, uniform window sampling;
+* `QueueState` — the async runner's trajectory-chunk transport.
 """
 from __future__ import annotations
 
@@ -112,8 +120,147 @@ def rollout_reset(state: RolloutState) -> RolloutState:
 
 
 # --------------------------------------------------------------------------
-# Device-resident trajectory queue: the third structure of the experience
-# protocol, used by the async actor/learner runner
+# Sequence replay: the third *dataset* regime of the experience protocol,
+# for recurrent off-policy systems (R2D2-style rec-MADQN). Where the flat
+# table stores i.i.d. per-step rows and the rollout accumulator one
+# consume-and-reset trajectory, this stores fixed-length time-major
+# *windows* cut from the incoming step stream: every `stride` steps (once
+# `window_len` steps have accumulated) the last `window_len` rows of each
+# env lane become one stored window, overwritten FIFO at capacity, and
+# sampling draws whole windows uniformly. Recurrent trainers split each
+# window into a burn-in prefix (unrolled with stopped gradients to warm
+# the memory) and a training suffix; the window-start memory itself rides
+# *inside* the stored items — recurrent systems store the executor's
+# incoming carry per step in ``Transition.extras["carry_in"]`` exactly
+# like rec-PPO does, so `repro.nn.recurrent.window_start_carry` reads the
+# stored row 0 and the R2D2 zero start-state approximation is never
+# needed.
+#
+# Schedule invariant (load-bearing — see docs/ARCHITECTURE.md): `size`
+# advances as a pure function of the step counter `t` (`seq_expected_size`
+# is the closed form), never of the *data*, so `seq_can_sample` keeps the
+# update schedule data-independent and the seed-vmap runner's hoisted
+# update gate (`_one_iteration_seeds`) stays sound. Prioritized *sampling*
+# may key on data; prioritized fill-triggered updates must not.
+
+
+class SeqBufferState(NamedTuple):
+    """Sequence-replay table: windows + a rolling ring of the live stream."""
+
+    storage: Any          # pytree, leaves (capacity, window_len, ...) — windows
+    acc: Any              # pytree, leaves (window_len, num_envs, ...) — step ring
+    t: jnp.ndarray        # () int32 — total steps observed
+    insert_pos: jnp.ndarray  # () int32 — next window slot to overwrite
+    size: jnp.ndarray     # () int32 — stored windows (pure function of t)
+
+
+def seq_init(example_item, capacity: int, window_len: int, num_envs: int) -> SeqBufferState:
+    """A fresh sequence buffer of ``capacity`` windows of ``window_len`` steps.
+
+    ``example_item``: a pytree with per-item shapes (no time/env dims) —
+    for recurrent systems a `Transition` whose extras carry the per-step
+    ``carry_in`` row. ``num_envs`` sizes the rolling step ring; each flush
+    inserts one window per env lane.
+    """
+    storage = jax.tree_util.tree_map(
+        lambda x: jnp.zeros(
+            (capacity, window_len) + jnp.shape(x), jnp.asarray(x).dtype
+        ),
+        example_item,
+    )
+    acc = jax.tree_util.tree_map(
+        lambda x: jnp.zeros(
+            (window_len, num_envs) + jnp.shape(x), jnp.asarray(x).dtype
+        ),
+        example_item,
+    )
+    return SeqBufferState(
+        storage=storage,
+        acc=acc,
+        t=jnp.zeros((), jnp.int32),
+        insert_pos=jnp.zeros((), jnp.int32),
+        size=jnp.zeros((), jnp.int32),
+    )
+
+
+def seq_add(state: SeqBufferState, items, *, stride: int) -> SeqBufferState:
+    """Append one vectorised step (leaves ``(num_envs, ...)``); flush windows.
+
+    The step lands in the rolling ring; once ``window_len`` steps have
+    accumulated, every ``stride``-th step flushes the ring — the last
+    ``window_len`` rows of each env lane, in time order — into the window
+    table, overwriting FIFO at capacity.  ``stride < window_len`` makes
+    consecutive windows overlap by ``window_len - stride`` steps (the
+    R2D2 idiom: stride ``seq_len`` overlaps exactly the burn-in prefix,
+    so every transition trains once).  The flush condition depends only
+    on the step counter, never the data (see the regime note above).
+    """
+    acc_leaves = jax.tree_util.tree_leaves(state.acc)
+    window_len, num_envs = acc_leaves[0].shape[:2]
+    capacity = jax.tree_util.tree_leaves(state.storage)[0].shape[0]
+
+    pos = state.t % window_len
+    acc = jax.tree_util.tree_map(
+        lambda s, x: s.at[pos].set(x.astype(s.dtype)), state.acc, items
+    )
+    t1 = state.t + 1
+    flush = (t1 >= window_len) & ((t1 - window_len) % stride == 0)
+    # ring slots in time order: order[j] holds step (t1 - window_len + j)
+    order = (pos + 1 + jnp.arange(window_len)) % window_len
+    idx = (state.insert_pos + jnp.arange(num_envs)) % capacity
+
+    def insert(s, a):
+        windows = jnp.moveaxis(a[order], 0, 1)  # (num_envs, window_len, ...)
+        return s.at[idx].set(jnp.where(flush, windows, s[idx]))
+
+    storage = jax.tree_util.tree_map(insert, state.storage, acc)
+    grow = jnp.where(flush, num_envs, 0).astype(jnp.int32)
+    return SeqBufferState(
+        storage=storage,
+        acc=acc,
+        t=t1,
+        insert_pos=(state.insert_pos + grow) % capacity,
+        size=jnp.minimum(state.size + grow, capacity),
+    )
+
+
+def seq_sample(state: SeqBufferState, key, batch_size: int):
+    """Uniformly sample ``batch_size`` whole windows, time-major.
+
+    Returns the stored pytree with leaves ``(window_len, batch_size, ...)``
+    — the same (T, B) layout BPTT trainers consume from the rollout
+    accumulator, stored ``extras["carry_in"]`` rows included.
+    """
+    maxval = jnp.maximum(state.size, 1)
+    idx = jax.random.randint(key, (batch_size,), 0, maxval)
+    return jax.tree_util.tree_map(
+        lambda s: jnp.moveaxis(s[idx], 0, 1), state.storage
+    )
+
+
+def seq_can_sample(state: SeqBufferState, min_windows: int):
+    """True once at least ``min_windows`` windows are stored."""
+    return state.size >= min_windows
+
+
+def seq_expected_size(
+    t: int, capacity: int, window_len: int, num_envs: int, stride: int
+) -> int:
+    """Closed-form ``size`` after ``t`` `seq_add` calls (host-side int math).
+
+    The buffer's fill is a pure function of the step counter: ``t`` steps
+    produce ``max(0, (t - window_len) // stride + 1)`` flushes of
+    ``num_envs`` windows each, capped at ``capacity``.  Tests pin
+    `SeqBufferState.size` against this to guard the data-independent
+    update-schedule invariant the seed-vmap runner relies on.
+    """
+    flushes = max(0, (t - window_len) // stride + 1)
+    return min(num_envs * flushes, capacity)
+
+
+# --------------------------------------------------------------------------
+# Device-resident trajectory queue: the transport structure of the
+# experience protocol, used by the async actor/learner runner
 # (`repro.distributed.impala`). Where the replay table and the rollout
 # accumulator are *datasets* (owned by the learner), the queue is a
 # *transport*: a fixed-capacity FIFO ring of trajectory-chunk slots that

@@ -37,7 +37,7 @@ from repro.nn.recurrent import reset_carry
 class System:
     """A full MARL algorithm specification (executor + trainer + dataset).
 
-    The dataset half is an *experience-collection protocol* that covers both
+    The dataset half is an *experience-collection protocol* with three
     regimes:
 
       * replay (MADQN/VDN/QMIX/MADDPG): ``observe`` writes per-step rows
@@ -46,11 +46,18 @@ class System:
       * rollout (IPPO/MAPPO/DIAL): ``observe`` appends to a time-major
         ``rollout_len`` accumulator, ``can_sample`` fires exactly when the
         rollout is complete, and ``update`` consumes the whole trajectory
-        and returns the buffer *reset* (consume-and-reset).
+        and returns the buffer *reset* (consume-and-reset);
+      * sequence replay (rec-MADQN): ``observe`` streams steps through a
+        rolling ring that flushes fixed-length overlapping windows into a
+        FIFO window table (`repro.core.buffer.SeqBufferState`),
+        ``can_sample`` gates on the stored-window count (a pure function
+        of the step counter), and ``update`` samples whole windows for
+        burn-in + BPTT and returns the buffer unchanged.
 
     Executors may thread act-time side outputs (log-probs, values, outgoing
-    messages) to the trainer by returning them as the third element of
-    ``select_actions``; the runners store them in ``Transition.extras``.
+    messages, incoming recurrent carries) to the trainer by returning them
+    as the third element of ``select_actions``; the runners store them in
+    ``Transition.extras``.
     """
 
     env: Any
@@ -288,11 +295,12 @@ def _one_iteration_seeds(system: System, tenv, carry, keys):
     the lane axis: under a plain vmap the per-lane `lax.cond` lowers to
     `select`, executing both branches every iteration — for rollout systems
     that means the full consume-and-reset update every step instead of every
-    ``rollout_len`` steps, destroying the fused program's speed.  Both
+    ``rollout_len`` steps, destroying the fused program's speed.  All three
     experience regimes advance their schedules data-independently (replay
-    fill and rollout cursors move identically in every lane), so all lanes
-    agree and one scalar cond preserves the serial runner's exact update
-    cadence.
+    fill, rollout cursors and sequence-window counts move identically in
+    every lane — `seq_expected_size` is the closed form tests pin), so all
+    lanes agree and one scalar cond preserves the serial runner's exact
+    update cadence.
     """
     st, k_upd, metrics = jax.vmap(
         functools.partial(_step_phase, system, tenv)

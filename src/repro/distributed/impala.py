@@ -19,7 +19,7 @@ The bounded-staleness contract (pinned by ``tests/test_async.py``):
 * staleness 0 — with ``num_actors=1`` and ``param_sync_every=1`` the
   program replays anakin's exact acting stream (`_act_phase` with the
   same key threading) and update sequence (the shipped per-row update
-  keys), **bitwise**, for both experience regimes;
+  keys), **bitwise**, for all three experience regimes;
 * staleness bounded — a chunk collected under snapshot ``s`` is consumed
   after at most ``param_sync_every * num_actors * U`` learner updates
   (``U`` rows per chunk, one potential update per row), and every
@@ -46,6 +46,7 @@ import jax.numpy as jnp
 from repro.core.buffer import (
     QueueState,
     RolloutState,
+    SeqBufferState,
     queue_init,
     queue_pop,
     queue_push,
@@ -90,9 +91,11 @@ def default_unroll_len(system: System) -> int:
 
     Rollout-regime systems (PPO family, DIAL) unroll exactly one rollout
     per chunk, so chunk boundaries coincide with update boundaries and the
-    staleness-0 run replays anakin's cadence exactly.  Replay-regime
-    systems have no natural window — chunks of 8 steps amortise queue
-    traffic while keeping within-chunk staleness small.
+    staleness-0 run replays anakin's cadence exactly.  Replay and
+    sequence-replay systems have no natural window — chunks of 8 steps
+    amortise queue traffic while keeping within-chunk staleness small
+    (the sequence buffer's own window striding is independent of the
+    chunk length: `observe` consumes the chunk row by row).
     """
     buffer = system.init_buffer(1)
     if isinstance(buffer, RolloutState):
@@ -103,11 +106,20 @@ def default_unroll_len(system: System) -> int:
 def _chunk_example(buffer, unroll_len: int, num_envs: int):
     """A zero trajectory chunk (time-major ``(U, num_envs, ...)`` leaves)
     matching the system's per-step `Transition` structure, recovered from
-    its dataset storage (both regimes store per-step transition rows)."""
+    its dataset storage.  The rollout accumulator and the sequence
+    buffer's step ring both hold ``(T, num_envs, ...)`` per-step rows; the
+    flat replay table holds ``(capacity, ...)`` rows."""
     if isinstance(buffer, RolloutState):
         return jax.tree_util.tree_map(
             lambda x: jnp.zeros((unroll_len, num_envs) + x.shape[2:], x.dtype),
             buffer.storage,
+        )
+    if isinstance(buffer, SeqBufferState):
+        # storage leaves are whole windows (capacity, window_len, ...);
+        # the per-step transition structure lives in the step ring
+        return jax.tree_util.tree_map(
+            lambda x: jnp.zeros((unroll_len, num_envs) + x.shape[2:], x.dtype),
+            buffer.acc,
         )
     return jax.tree_util.tree_map(
         lambda x: jnp.zeros((unroll_len, num_envs) + x.shape[1:], x.dtype),

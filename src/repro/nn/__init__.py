@@ -23,6 +23,7 @@ from repro.nn.layers import (
 from repro.nn.recurrent import (
     LinearScannedRNN,
     ScannedRNN,
+    burn_in_carry,
     make_core,
     reset_carry,
     window_start_carry,
@@ -39,6 +40,7 @@ __all__ = [
     "LinearScannedRNN",
     "ScannedRNN",
     "Sequential",
+    "burn_in_carry",
     "initializers",
     "make_core",
     "reset_carry",

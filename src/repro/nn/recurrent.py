@@ -18,14 +18,19 @@ threads its memory through the same three pieces:
   Anakin/shard_map runners apply it at `AutoReset` boundaries, and BPTT
   trainers apply it at stored FIRST rows — both call this helper;
 * `window_start_carry` — the one code path deciding what memory a BPTT
-  window opens with.  On-policy recurrent trainers store the executor's
-  incoming carry per step in ``Transition.extras["carry_in"]`` and re-run
-  from the stored window-start carry (exact: on-policy windows never span
-  a parameter update).  Trainers that do not store carries (DIAL/RIAL)
-  fall back to the R2D2 *zero start-state approximation* — a window that
-  opens mid-episode replays from zeroed memory, accepting a small state
-  mismatch.  This fallback line is the approximation's single home; it
-  matters only when ``rollout_len`` is shorter than the episode.
+  window opens with.  Every recurrent trainer in the library stores the
+  executor's incoming carry per step in ``Transition.extras["carry_in"]``
+  and re-runs from the stored window-start carry: exact for the on-policy
+  family (rollout windows never span a parameter update) and for
+  DIAL/RIAL, and the R2D2 *stored-state* start for sequence-replay
+  systems (rec-MADQN), where the stored carry came from earlier params —
+  the standard R2D2 trade, softened by `burn_in_carry`.  The zero
+  start-state fallback remains only for callers with no stored carries
+  (none in-tree; kept as the documented degenerate case);
+* `burn_in_carry` — the R2D2 burn-in rule for sequence replay: unroll the
+  window's burn-in prefix from the stored start carry to warm the memory
+  under *current* params, then stop gradients, so TD errors only shape
+  the training suffix.
 
 The executor-side carry itself is the typed `repro.core.types.Carry`
 (hidden state + optional outgoing messages), stored per env copy in
@@ -241,22 +246,45 @@ def reset_carry(carry, reset, initial=None):
 
 
 def window_start_carry(extras, initial_carry, batch_shape):
-    """The memory a BPTT window opens with — stored carry, else zeros.
+    """The memory a BPTT window opens with — the stored carry row 0.
 
-    On-policy recurrent trainers (rec-IPPO / rec-MAPPO) record the
-    executor's incoming carry per step in ``extras["carry_in"]``; the
-    window-start carry is then the stored row 0, which is *exact*: the
-    rollout accumulator consumes-and-resets on every update, so the stored
-    carries were produced by the parameters being trained.
+    Every recurrent trainer records the executor's incoming carry per step
+    in ``extras["carry_in"]``; the window-start carry is the stored row 0.
+    For the rollout regime (rec-IPPO / rec-MAPPO / DIAL / RIAL) this is
+    *exact*: the accumulator consumes-and-resets on every update, so the
+    stored carries were produced by the parameters being trained.  For the
+    sequence-replay regime (rec-MADQN) it is the R2D2 *stored-state*
+    start: the carry came from the acting-time (possibly older) params —
+    strictly closer to the truth than restarting from zeros, and the
+    residual mismatch is what `burn_in_carry`'s warm-up absorbs.
 
-    Trainers that do not store carries fall back to
+    Callers with no stored carries fall back to
     ``initial_carry(batch_shape)`` — the R2D2 zero start-state
-    approximation, kept to this single code path: a window that opens
-    mid-episode replays from zeroed memory rather than the executor's true
-    state.  Exact only when windows are episode-aligned (DIAL's default
-    ``rollout_len = env.horizon``); see ROADMAP for the episode-aligned
-    alternative if mid-episode windows regress at scale.
+    approximation.  No in-tree trainer uses this path any more (DIAL
+    retired it when its executor started storing carries); it stays as the
+    documented degenerate case for extras-less callers.
     """
     if "carry_in" in extras:
         return jax.tree_util.tree_map(lambda x: x[0], extras["carry_in"])
     return initial_carry(batch_shape)
+
+
+def burn_in_carry(unroll, carry, xs, resets):
+    """Warm a sequence-replay window's start memory over its burn-in prefix.
+
+    The R2D2 burn-in rule: unroll the memory core over the window's first
+    ``burn_in`` rows starting from the stored window-start carry (see
+    `window_start_carry`), then **stop gradients** on the resulting carry
+    — the prefix exists to refresh stale memory under current parameters,
+    not to receive TD gradients; training only shapes the suffix.
+
+    ``unroll`` is the caller's core closure with the standard
+    ``(carry, xs, resets) -> (carry, outputs)`` contract (e.g. one agent's
+    encoder->core stack); ``xs`` / ``resets`` are the burn-in prefix rows,
+    time-major.  A zero-length prefix (``burn_in = 0``) skips the unroll
+    and returns the (stop-gradiented) stored carry directly.
+    """
+    if jax.tree_util.tree_leaves(xs)[0].shape[0] == 0:
+        return jax.lax.stop_gradient(carry)
+    carry, _ = unroll(carry, xs, resets)
+    return jax.lax.stop_gradient(carry)

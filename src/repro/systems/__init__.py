@@ -5,6 +5,7 @@ from repro.systems.qmix import make_qmix
 from repro.systems.ippo import make_ippo
 from repro.systems.mappo import make_mappo
 from repro.systems.onpolicy import make_rec_ippo, make_rec_mappo
+from repro.systems.rec_madqn import make_rec_madqn
 from repro.systems.maddpg import make_maddpg, make_mad4pg
 from repro.systems.dial import make_dial
 from repro.systems.registry import (
@@ -23,6 +24,7 @@ __all__ = [
     "make_mappo",
     "make_rec_ippo",
     "make_rec_mappo",
+    "make_rec_madqn",
     "make_maddpg",
     "make_mad4pg",
     "make_dial",

@@ -21,10 +21,14 @@ Memory handling follows the shared memory-core protocol
 (`repro.nn.recurrent`): the per-agent GRU is a `ScannedRNN`, the executor
 carry is the typed `repro.core.types.Carry` (hidden + outgoing messages),
 boundary resets inside the BPTT scan use `reset_carry` at stored FIRST
-rows, and the window-start memory comes from `window_start_carry` — DIAL
-stores no per-step carries, so windows that open mid-episode fall back to
-the R2D2 zero start-state approximation documented there (exact at the
-default episode-aligned ``rollout_len = env.horizon``).
+rows, and the window-start memory comes from `window_start_carry` — the
+executor stores its incoming carry per step in
+``Transition.extras["carry_in"]`` (exactly like rec-PPO), so every BPTT
+window re-runs from the *stored* executor state, even when a non-default
+``rollout_len`` opens windows mid-episode.  (At the default
+episode-aligned ``rollout_len = env.horizon`` the stored window-start
+carry is the zeros the runner reset it to, so seed milestones are
+unchanged from the earlier zero start-state code path.)
 """
 from __future__ import annotations
 
@@ -193,7 +197,9 @@ def make_dial(env, cfg: DialConfig = DialConfig()) -> System:
                     m, jax.random.fold_in(k_dru, i), cfg.noise_std, training
                 )
             new_h[a] = h
-        extras = {"msgs": out_msgs}
+        # the incoming carry rides along so BPTT windows re-run from the
+        # exact stored executor memory (window_start_carry's stored path)
+        extras = {"msgs": out_msgs, "carry_in": carry}
         if rial:
             extras["msg_bits"] = msg_bits
         return actions, Carry(hidden=new_h, message=out_msgs), extras
@@ -207,9 +213,12 @@ def make_dial(env, cfg: DialConfig = DialConfig()) -> System:
         the computation graph). RIAL: stored hard bits are teacher-forced
         (no cross-agent gradients); returns message Q-values as well.
         Memory is reset at stored FIRST rows via the shared `reset_carry`
-        rule, and the window opens from `window_start_carry` (DIAL stores
-        no carries, so this is the documented zero start-state path). Ends
-        with one bootstrap step on the final next-observation. Returns
+        rule, and the window opens from `window_start_carry`'s *stored*
+        path — the executor records its incoming carry per step in
+        ``extras["carry_in"]``, so mid-episode window starts replay the
+        true executor memory (on-policy rollouts never span a parameter
+        update, so the stored carry is exact).  Ends with one bootstrap
+        step on the final next-observation.  Returns
         (qs, q_boot, msg_qs, msg_q_boot) — the msg outputs are {} for DIAL.
 
         When the channel is off and the memory core is linear (the
@@ -336,7 +345,10 @@ def make_dial(env, cfg: DialConfig = DialConfig()) -> System:
     def example_transition():
         """A zero `Transition` fixing the buffer's shapes and dtypes."""
         obs = {a: jnp.zeros(spec.observations[a].shape) for a in ids}
-        extras = {"msgs": {a: jnp.zeros((cfg.channel_size,)) for a in ids}}
+        extras = {
+            "msgs": {a: jnp.zeros((cfg.channel_size,)) for a in ids},
+            "carry_in": initial_carry(()),
+        }
         if rial:
             extras["msg_bits"] = {
                 a: jnp.zeros((cfg.channel_size,), jnp.int32) for a in ids

@@ -3,6 +3,10 @@
 Optionally stabilised with policy fingerprints (Foerster et al. 2017c) via
 ``OffPolicyConfig(fingerprint=True)`` — the paper's
 ``stabilising.FingerPrintStabalisation(architecture)`` wrapper.
+
+This is the feed-forward variant over the flat per-step replay table; the
+recurrent variant over R2D2 sequence replay (stored-carry windows with
+burn-in) is `repro.systems.rec_madqn.make_rec_madqn`.
 """
 from repro.systems.offpolicy import OffPolicyConfig, make_offpolicy_system
 

@@ -1,0 +1,295 @@
+"""rec-MADQN — recurrent independent Q-learning over sequence replay (R2D2).
+
+The first *recurrent off-policy* system: per-agent encoder -> memory core
+-> Q-head stacks (Kapturowski et al. 2019's R2D2 recipe, one learner per
+agent as in independent MADQN), trained from the sequence-replay regime
+(`repro.core.buffer.SeqBufferState`) instead of the flat per-step table —
+a recurrent value function needs its memory trajectory, so replay stores
+fixed-length time-major windows with the executor's incoming `Carry`
+riding along per step in ``Transition.extras["carry_in"]`` (the same
+protocol rec-IPPO uses).
+
+Each sampled window splits into a **burn-in prefix** and a **training
+suffix**: the trainer opens from the *stored* window-start carry
+(`window_start_carry` — never the zero start-state approximation), unrolls
+the burn-in rows under current online/target params with stopped gradients
+(`burn_in_carry`) to wash out parameter staleness, then runs double-DQN TD
+over the suffix — online-net argmax, target-net evaluation, in-window
+next-Q shift plus one bootstrap step on the final next-observation (gated
+by the stored discount at terminals), with memory reset at stored FIRST
+rows inside the unroll (`reset_carry` semantics, folded into the cores'
+``resets`` argument).
+
+Weights are shared across agents when the env is homogeneous and
+``shared_weights`` is set; heterogeneous envs (speaker_listener) get
+per-agent stacks, so the system runs on all seven envs.  The update
+schedule is data-independent (`seq_can_sample` gates on a pure function of
+the step counter), which keeps the seed-vmap runners' hoisted update gate
+sound — see docs/ARCHITECTURE.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.core.buffer import seq_add, seq_can_sample, seq_init, seq_sample
+from repro.core.system import System
+from repro.core.types import Carry, TrainState, Transition
+from repro.envs.api import EnvSpec, StepType
+from repro.nn import MLP
+from repro.nn.recurrent import burn_in_carry, make_core, window_start_carry
+
+
+@dataclasses.dataclass(frozen=True)
+class RecMadqnConfig:
+    """R2D2-style recurrent Q-learning hyperparameters.
+
+    The replay window is ``burn_in + seq_len`` steps: ``burn_in`` rows
+    warm the memory with stopped gradients, ``seq_len`` rows take TD
+    gradients.  ``stride`` spaces window starts in the incoming step
+    stream (None -> ``seq_len``, the R2D2 default: consecutive windows
+    overlap by exactly the burn-in prefix, so every transition lands in
+    exactly one training suffix).  ``buffer_capacity`` / ``min_windows`` /
+    ``batch_size`` count *windows*, not steps.
+    """
+
+    hidden_sizes: Sequence[int] = (64,)
+    learning_rate: float = 5e-4
+    gamma: float = 0.99
+    seq_len: int = 8
+    burn_in: int = 4
+    stride: Optional[int] = None
+    buffer_capacity: int = 2048
+    batch_size: int = 32
+    min_windows: int = 64
+    target_update_period: int = 100
+    eps_start: float = 1.0
+    eps_end: float = 0.05
+    eps_decay_steps: int = 10_000
+    shared_weights: bool = True
+    recurrent_core: str = "gru"
+    max_grad_norm: float = 10.0
+    distributed_axis: Optional[str] = None
+    updates_per_step: int = 1
+
+
+def make_rec_madqn(env, cfg: RecMadqnConfig = RecMadqnConfig()) -> System:
+    """Build the recurrent MADQN `System` over sequence replay."""
+    spec: EnvSpec = env.spec()
+    ids = list(spec.agent_ids)
+    num_actions = {a: spec.actions[a].num_values for a in ids}
+    obs_dims = {a: spec.observations[a].shape[0] for a in ids}
+    hidden = cfg.hidden_sizes[-1]
+    window_len = cfg.burn_in + cfg.seq_len
+    stride = cfg.seq_len if cfg.stride is None else cfg.stride
+    if cfg.seq_len < 1 or cfg.burn_in < 0 or stride < 1:
+        raise ValueError(
+            f"need seq_len >= 1, burn_in >= 0, stride >= 1; got "
+            f"seq_len={cfg.seq_len}, burn_in={cfg.burn_in}, stride={stride}"
+        )
+
+    homogeneous = len(set((obs_dims[a], num_actions[a]) for a in ids)) == 1
+    share = cfg.shared_weights and homogeneous
+
+    def stack(in_dim, out_dim):
+        """One encoder -> memory core -> Q-head network stack."""
+        return {
+            "encoder": MLP((in_dim, *cfg.hidden_sizes), activate_final=True),
+            "core": make_core(cfg.recurrent_core, hidden, hidden),
+            "head": MLP((hidden, out_dim)),
+        }
+
+    nets = {a: stack(obs_dims[a], num_actions[a]) for a in ids}
+
+    def init_stack(net, key):
+        """Initialise one encoder/core/head stack."""
+        ke, kc, kh = jax.random.split(key, 3)
+        return {
+            "encoder": net["encoder"].init(ke),
+            "core": net["core"].init(kc),
+            "head": net["head"].init(kh),
+        }
+
+    def init_params(key):
+        """Per-agent Q-stacks (one shared stack when homogeneous)."""
+        if share:
+            return {"shared": init_stack(nets[ids[0]], key)}
+        keys = jax.random.split(key, len(ids))
+        return {a: init_stack(nets[a], k) for a, k in zip(ids, keys)}
+
+    def _p(params, agent):
+        return params["shared"] if share else params[agent]
+
+    def q_step(params, agent, h, x):
+        """One act-time step: ``(h, obs) -> (h, q_values)``."""
+        net, p = nets[agent], _p(params, agent)
+        z = net["encoder"].apply(p["encoder"], x)
+        h, y = net["core"].step(p["core"], h, z)
+        return h, net["head"].apply(p["head"], y)
+
+    def q_unroll(params, agent, h, xs, resets):
+        """BPTT over ``(T, B, obs)`` rows with FIRST-row resets."""
+        net, p = nets[agent], _p(params, agent)
+        z = net["encoder"].apply(p["encoder"], xs)
+        h, ys = net["core"].unroll(p["core"], h, z, resets)
+        return h, net["head"].apply(p["head"], ys)
+
+    opt = optim.chain(
+        optim.clip_by_global_norm(cfg.max_grad_norm),
+        optim.adamw(cfg.learning_rate),
+    )
+
+    def init_train(key) -> TrainState:
+        """Initialise the `TrainState` (params, targets, optimizer, steps)."""
+        params = init_params(key)
+        return TrainState(
+            params=params,
+            target_params=params,
+            opt_state=opt.init(params),
+            steps=jnp.zeros((), jnp.int32),
+        )
+
+    def eps_at(steps):
+        """Linearly-decayed exploration epsilon after ``steps`` updates."""
+        frac = jnp.clip(steps / cfg.eps_decay_steps, 0.0, 1.0)
+        return cfg.eps_start + frac * (cfg.eps_end - cfg.eps_start)
+
+    # ------------------------------------------------------------ executor
+
+    def initial_carry(batch_shape):
+        """The executor's initial memory for a ``batch_shape`` of envs."""
+        return Carry(
+            hidden={a: jnp.zeros((*batch_shape, hidden)) for a in ids}
+        )
+
+    def select_actions(train: TrainState, obs, state, carry, key, training=True):
+        """Eps-greedy recurrent act step; the incoming carry rides extras.
+
+        In training mode the *incoming* carry is stored per step in
+        ``extras["carry_in"]`` (the runner has already zeroed it at
+        auto-reset FIRST boundaries), so sampled replay windows open from
+        the exact executor memory instead of the R2D2 zero start-state.
+        """
+        del state  # decentralised execution
+        eps = eps_at(train.steps) if training else 0.0
+        actions, new_h = {}, {}
+        for i, a in enumerate(ids):
+            h, q = q_step(train.params, a, carry.hidden[a], obs[a])
+            greedy = jnp.argmax(q, axis=-1)
+            k_rand, k_explore = jax.random.split(jax.random.fold_in(key, i))
+            rand = jax.random.randint(k_rand, greedy.shape, 0, num_actions[a])
+            explore = jax.random.uniform(k_explore, greedy.shape) < eps
+            actions[a] = jnp.where(explore, rand, greedy).astype(jnp.int32)
+            new_h[a] = h
+        extras = {"carry_in": carry} if training else {}
+        return actions, Carry(hidden=new_h), extras
+
+    # ------------------------------------------------------------- trainer
+
+    def loss_fn(params, target_params, win: Transition, carry0: Carry):
+        """Double-DQN TD over the training suffix of each sampled window.
+
+        ``win`` is time-major ``(window_len, B)``; both online and target
+        nets warm their memory over the burn-in prefix from the stored
+        window-start carry with stopped gradients, then unroll the suffix.
+        Next-step Q's come from the in-window shift plus one bootstrap step
+        on the final next-observation; terminal rows are gated by the
+        stored discount (a row whose successor opens a new episode carries
+        discount 0, so its stale-memory bootstrap never leaks in).
+        """
+        first = win.step_type == StepType.FIRST  # (window_len, B)
+        sl = slice(cfg.burn_in, None)
+        total = 0.0
+        for a in ids:
+            on = lambda h, xs, rs: q_unroll(params, a, h, xs, rs)
+            tg = lambda h, xs, rs: q_unroll(target_params, a, h, xs, rs)
+            prefix = win.obs[a][: cfg.burn_in]
+            h_on = burn_in_carry(on, carry0.hidden[a], prefix, first[: cfg.burn_in])
+            h_tg = burn_in_carry(tg, carry0.hidden[a], prefix, first[: cfg.burn_in])
+            h_on, q_on = on(h_on, win.obs[a][sl], first[sl])  # (seq_len, B, A)
+            h_tg, q_tg = tg(h_tg, win.obs[a][sl], first[sl])
+            last_obs = win.next_obs[a][-1]
+            _, qb_on = q_step(params, a, h_on, last_obs)
+            _, qb_tg = q_step(target_params, a, h_tg, last_obs)
+            q_next_on = jnp.concatenate([q_on[1:], qb_on[None]], axis=0)
+            q_next_tg = jnp.concatenate([q_tg[1:], qb_tg[None]], axis=0)
+            best = jnp.argmax(q_next_on, axis=-1)
+            qn = jnp.take_along_axis(q_next_tg, best[..., None], -1)[..., 0]
+            qa = jnp.take_along_axis(
+                q_on, win.actions[a][sl][..., None], -1
+            )[..., 0]
+            target = win.rewards[a][sl] + cfg.gamma * win.discount[sl] * qn
+            td = qa - jax.lax.stop_gradient(target)
+            total = total + jnp.mean(jnp.square(td))
+        return total / len(ids)
+
+    def update(train: TrainState, buffer, key):
+        """One trainer update: sample windows, TD step, periodic target sync."""
+        win = seq_sample(buffer, key, cfg.batch_size)  # leaves (T, B, ...)
+        carry0 = window_start_carry(
+            win.extras, initial_carry, (cfg.batch_size,)
+        )
+        win = win._replace(
+            extras={k: v for k, v in win.extras.items() if k != "carry_in"}
+        )
+        loss, grads = jax.value_and_grad(loss_fn)(
+            train.params, train.target_params, win, carry0
+        )
+        if cfg.distributed_axis:
+            grads = jax.lax.pmean(grads, cfg.distributed_axis)
+        updates, opt_state = opt.update(grads, train.opt_state, train.params)
+        params = optim.apply_updates(train.params, updates)
+        steps = train.steps + 1
+        target_params = jax.tree_util.tree_map(
+            lambda t, o: jnp.where(steps % cfg.target_update_period == 0, o, t),
+            train.target_params,
+            params,
+        )
+        return (
+            TrainState(params, target_params, opt_state, steps),
+            buffer,
+            {"loss": loss, "eps": eps_at(steps)},
+        )
+
+    # ------------------------------------------------------------- dataset
+
+    def example_transition():
+        """A zero `Transition` fixing the buffer's shapes and dtypes."""
+        obs = {a: jnp.zeros(spec.observations[a].shape) for a in ids}
+        return Transition(
+            obs=obs,
+            actions={a: jnp.zeros((), jnp.int32) for a in ids},
+            rewards={a: jnp.zeros(()) for a in ids},
+            discount=jnp.zeros(()),
+            next_obs=obs,
+            state=jnp.zeros(spec.state.shape),
+            next_state=jnp.zeros(spec.state.shape),
+            # the incoming Carry per step, read back at row 0 of each
+            # sampled window (window_start_carry) — the stored-state start
+            extras={"carry_in": initial_carry(())},
+            step_type=jnp.zeros((), jnp.int32),
+        )
+
+    def init_buffer(num_envs: int):
+        """A fresh sequence-replay buffer for ``num_envs`` parallel envs."""
+        return seq_init(
+            example_transition(), cfg.buffer_capacity, window_len, num_envs
+        )
+
+    return System(
+        env=env,
+        spec=spec,
+        init_train=init_train,
+        update=update,
+        select_actions=select_actions,
+        initial_carry=initial_carry,
+        init_buffer=init_buffer,
+        observe=lambda buf, tr: seq_add(buf, tr, stride=stride),
+        can_sample=lambda buf: seq_can_sample(buf, cfg.min_windows),
+        updates_per_step=cfg.updates_per_step,
+        name="rec_madqn",
+    )

@@ -35,6 +35,7 @@ from repro.systems.onpolicy import (
     make_rec_mappo,
 )
 from repro.systems.qmix import make_qmix
+from repro.systems.rec_madqn import RecMadqnConfig, make_rec_madqn
 from repro.systems.vdn import make_vdn
 
 
@@ -89,6 +90,11 @@ REGISTRY: Dict[str, SystemEntry] = {
     "rec_ippo": SystemEntry(
         make_rec_ippo, PPOConfig,
         description="recurrent IPPO (GRU memory cores, partial observability)",
+    ),
+    "rec_madqn": SystemEntry(
+        make_rec_madqn, RecMadqnConfig,
+        description="recurrent MADQN over R2D2 sequence replay "
+        "(stored-carry windows, burn-in)",
     ),
     "rec_mappo": SystemEntry(
         make_rec_mappo, PPOConfig,

@@ -22,6 +22,7 @@ from repro.eval import evaluate
 from repro.eval.sweep import evaluate_on_env
 from repro.systems.offpolicy import OffPolicyConfig
 from repro.systems.onpolicy import PPOConfig, make_ippo, make_rec_ippo
+from repro.systems.rec_madqn import RecMadqnConfig, make_rec_madqn
 from repro.systems.vdn import make_vdn
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
@@ -45,6 +46,15 @@ def _rec_ippo():
     )
 
 
+def _rec_madqn():
+    return make_rec_madqn(
+        MatrixGame(horizon=10),
+        RecMadqnConfig(hidden_sizes=(16,), seq_len=4, burn_in=2,
+                       buffer_capacity=64, batch_size=4, min_windows=4,
+                       eps_decay_steps=50, target_update_period=5),
+    )
+
+
 def _lane(tree, i):
     return jax.tree_util.tree_map(lambda x: x[i], tree)
 
@@ -65,16 +75,19 @@ def test_seed_keys_split_and_stacked():
 
 
 @pytest.mark.parametrize(
-    "make", [_vdn, _ippo, _rec_ippo], ids=["replay", "rollout", "recurrent"]
+    "make",
+    [_vdn, _ippo, _rec_ippo, _rec_madqn],
+    ids=["replay", "rollout", "recurrent", "seq_replay"],
 )
 def test_vmapped_seeds_bitwise_match_serial(make):
     """vmap-over-seeds training == N stacked serial runs, per-seed bitwise.
 
-    Covers both experience regimes plus the recurrent memory-core protocol
-    (whose carries and stored ``extras["carry_in"]`` gain a lane axis); for
-    the rollout systems this also pins the hoisted update gate to the
-    serial cadence (train.steps must agree — under a naive per-lane
-    cond-as-select the update count would differ).
+    Covers all three experience regimes (flat replay, rollout, sequence
+    replay) plus the recurrent memory-core protocol (whose carries and
+    stored ``extras["carry_in"]`` gain a lane axis); this also pins the
+    hoisted update gate to the serial cadence in every regime (train.steps
+    must agree — under a naive per-lane cond-as-select, or a seq-replay
+    fill schedule that keyed on data, the update count would differ).
     """
     system = make()
     seeds = [0, 1, 2, 3]

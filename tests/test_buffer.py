@@ -9,6 +9,15 @@ from repro.core.buffer import (
     buffer_can_sample,
     buffer_init,
     buffer_sample,
+    queue_init,
+    queue_pop,
+    queue_push,
+    queue_size,
+    rollout_add,
+    rollout_init,
+    rollout_ready,
+    rollout_reset,
+    rollout_take,
 )
 
 
@@ -69,3 +78,132 @@ def test_pytree_items_roundtrip():
     out = buffer_sample(state, jax.random.key(0), 2)
     assert out["obs"]["a"].shape == (2, 3)
     np.testing.assert_array_equal(np.asarray(out["r"]), np.ones((2,)))
+
+
+# ------------------------------------------------- rollout accumulator
+
+
+def _rollout_step(step, num_envs):
+    """Distinguishable per-step payload: value = step * 100 + env index."""
+    return {"x": jnp.arange(num_envs, dtype=jnp.int32) + 100 * step}
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rollout_len=st.integers(1, 8),
+    num_envs=st.integers(1, 4),
+    extra_adds=st.integers(0, 6),
+)
+def test_rollout_writes_past_len_are_dropped(rollout_len, num_envs, extra_adds):
+    """Adds beyond ``rollout_len`` fall off the end: the stored trajectory
+    keeps exactly the first ``rollout_len`` steps (JAX out-of-bounds scatter
+    drops the rest), while the cursor keeps counting."""
+    state = rollout_init({"x": jnp.zeros((), jnp.int32)}, rollout_len, num_envs)
+    n_adds = rollout_len + extra_adds
+    for step in range(n_adds):
+        state = rollout_add(state, _rollout_step(step, num_envs))
+    assert int(state.t) == n_adds
+    assert bool(rollout_ready(state, rollout_len))
+    stored = np.asarray(rollout_take(state)["x"])
+    assert stored.shape == (rollout_len, num_envs)
+    expect = np.stack(
+        [np.arange(num_envs) + 100 * s for s in range(rollout_len)]
+    )
+    np.testing.assert_array_equal(stored, expect)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rollout_len=st.integers(2, 8),
+    num_envs=st.integers(1, 4),
+    second_fill=st.integers(1, 8),
+)
+def test_rollout_take_then_reset_overwrites_in_place(
+    rollout_len, num_envs, second_fill
+):
+    """Consume-and-reset rewinds only the cursor; the next pass overwrites
+    the prefix in place and the suffix still holds the previous rollout."""
+    state = rollout_init({"x": jnp.zeros((), jnp.int32)}, rollout_len, num_envs)
+    for step in range(rollout_len):
+        state = rollout_add(state, _rollout_step(step, num_envs))
+    first = np.asarray(rollout_take(state)["x"]).copy()
+
+    state = rollout_reset(state)
+    assert int(state.t) == 0
+    assert not bool(rollout_ready(state, rollout_len))
+    for step in range(second_fill):
+        state = rollout_add(state, _rollout_step(1000 + step, num_envs))
+    stored = np.asarray(rollout_take(state)["x"])
+    k = min(second_fill, rollout_len)
+    expect_new = np.stack(
+        [np.arange(num_envs) + 100 * (1000 + s) for s in range(k)]
+    )
+    np.testing.assert_array_equal(stored[:k], expect_new)
+    # untouched tail still shows the consumed rollout — reset is cursor-only
+    np.testing.assert_array_equal(stored[k:], first[k:])
+
+
+# ------------------------------------------------- trajectory queue
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    capacity=st.integers(1, 8),
+    n_push=st.integers(0, 20),
+    n_pop=st.integers(0, 20),
+)
+def test_queue_fifo_order_and_drop_incoming(capacity, n_push, n_pop):
+    """Pushes past capacity drop the *incoming* item; pops come back in
+    exact FIFO order, matching a python deque oracle (wraparound included)."""
+    state = queue_init({"x": jnp.zeros((), jnp.int32)}, capacity)
+    oracle = []
+    for i in range(n_push):
+        state, ok = queue_push(state, {"x": jnp.int32(i)})
+        assert bool(ok) == (len(oracle) < capacity)
+        if bool(ok):
+            oracle.append(i)
+    assert int(queue_size(state)) == len(oracle)
+    for _ in range(min(n_pop, len(oracle))):
+        state, item = queue_pop(state)
+        assert int(item["x"]) == oracle.pop(0)
+    assert int(queue_size(state)) == len(oracle)
+
+
+@settings(max_examples=20, deadline=None)
+@given(capacity=st.integers(1, 6), rounds=st.integers(1, 5))
+def test_queue_wraparound_interleaved(capacity, rounds):
+    """Alternating fill/drain cycles exercise head wraparound: order and
+    size stay exact across ``rounds`` passes over the ring."""
+    state = queue_init({"x": jnp.zeros((), jnp.int32)}, capacity)
+    nxt = 0
+    oracle = []
+    for _ in range(rounds):
+        for _ in range(capacity):
+            state, ok = queue_push(state, {"x": jnp.int32(nxt)})
+            if bool(ok):
+                oracle.append(nxt)
+            nxt += 1
+        # drain all but one so the next round wraps at a shifted head
+        while len(oracle) > 1:
+            state, item = queue_pop(state)
+            assert int(item["x"]) == oracle.pop(0)
+    while oracle:
+        state, item = queue_pop(state)
+        assert int(item["x"]) == oracle.pop(0)
+    assert int(queue_size(state)) == 0
+
+
+def test_queue_pop_empty_leaves_size_zero():
+    """Popping empty is non-destructive: size stays 0, head stays put, and
+    the returned (stale) item is the zero-initialised slot."""
+    state = queue_init({"x": jnp.zeros((), jnp.int32)}, 4)
+    state, item = queue_pop(state)
+    assert int(queue_size(state)) == 0
+    assert int(state.head) == 0
+    assert int(item["x"]) == 0
+    # still fully usable afterwards
+    state, ok = queue_push(state, {"x": jnp.int32(7)})
+    assert bool(ok)
+    state, item = queue_pop(state)
+    assert int(item["x"]) == 7
+    assert int(queue_size(state)) == 0

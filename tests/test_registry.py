@@ -37,6 +37,10 @@ SYS_OVERRIDES = {
     "mappo": dict(rollout_len=4, epochs=1, num_minibatches=2),
     "rec_ippo": dict(rollout_len=4, epochs=1, num_minibatches=2, hidden_sizes=(16, 16)),
     "rec_mappo": dict(rollout_len=4, epochs=1, num_minibatches=2, hidden_sizes=(16, 16)),
+    # window_len 3, stride 2, 2 envs: 2 windows stored by step 3 -> the
+    # seq-replay gate opens inside the 4-iteration round-trip
+    "rec_madqn": dict(hidden_sizes=(16,), seq_len=2, burn_in=1,
+                      buffer_capacity=16, batch_size=2, min_windows=2),
     "dial": dict(rollout_len=4),
     "rial": dict(rollout_len=4),
 }

@@ -1,0 +1,290 @@
+"""Sequence-replay invariants (R2D2 stored-carry windows), property-based.
+
+Four layers of pins:
+
+* the `SeqBufferState` window mechanics against a python oracle —
+  striding, overlap, FIFO overwrite, time-order inside each window;
+* the schedule invariant — buffer fill is a pure function of the step
+  counter (`seq_expected_size` is the closed form), never of the data,
+  so the seed-vmap runner's hoisted update gate stays sound;
+* the recurrent window semantics — stored-state window starts diverge
+  from the retired zero-start approximation, and `burn_in_carry` warms
+  memory without leaking TD gradients into the prefix;
+* a slow rec-MADQN learning smoke on the climbing matrix game.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.buffer import (
+    seq_add,
+    seq_can_sample,
+    seq_expected_size,
+    seq_init,
+    seq_sample,
+)
+from repro.core.system import train_anakin
+from repro.envs import MatrixGame
+from repro.nn.recurrent import ScannedRNN, burn_in_carry, window_start_carry
+from repro.systems.rec_madqn import RecMadqnConfig, make_rec_madqn
+
+
+def _step_items(step, num_envs):
+    """Distinguishable payload: value = step * 1000 + env index."""
+    return {"x": jnp.arange(num_envs, dtype=jnp.int32) + 1000 * step}
+
+
+def _oracle_windows(n_steps, window_len, num_envs, stride):
+    """Python reference: the window stream `seq_add` should flush, in order."""
+    out = []
+    for t1 in range(1, n_steps + 1):
+        if t1 >= window_len and (t1 - window_len) % stride == 0:
+            for e in range(num_envs):
+                out.append(
+                    [1000 * s + e for s in range(t1 - window_len, t1)]
+                )
+    return out
+
+
+# ----------------------------------------------------- window mechanics
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    capacity=st.integers(1, 12),
+    window_len=st.integers(1, 6),
+    num_envs=st.integers(1, 3),
+    stride=st.integers(1, 6),
+    n_steps=st.integers(0, 24),
+)
+def test_seq_windows_match_python_oracle(
+    capacity, window_len, num_envs, stride, n_steps
+):
+    """Striding, overlap, and FIFO overwrite against a python reference.
+
+    The stored table must hold exactly the last ``capacity`` windows of
+    the oracle stream, each in time order, with ``size``/``insert_pos``
+    tracking the flush count.
+    """
+    state = seq_init({"x": jnp.zeros((), jnp.int32)}, capacity, window_len, num_envs)
+    for step in range(n_steps):
+        state = seq_add(state, _step_items(step, num_envs), stride=stride)
+    oracle = _oracle_windows(n_steps, window_len, num_envs, stride)
+
+    assert int(state.t) == n_steps
+    assert int(state.size) == min(len(oracle), capacity)
+    assert int(state.insert_pos) == len(oracle) % capacity
+
+    # FIFO: the last `capacity` oracle windows survive, at ring positions
+    stored = np.asarray(state.storage["x"])  # (capacity, window_len)
+    survivors = oracle[-capacity:]
+    start = (len(oracle) - len(survivors)) % capacity
+    for j, win in enumerate(survivors):
+        slot = (start + j) % capacity
+        assert stored[slot].tolist() == win, (slot, stored[slot], win)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    window_len=st.integers(2, 6),
+    num_envs=st.integers(1, 3),
+    stride=st.integers(1, 6),
+    batch=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_seq_sample_returns_whole_stored_windows(
+    window_len, num_envs, stride, batch, seed
+):
+    """Samples are whole stored windows, time-major (T, B, ...): each
+    sampled column is time-contiguous and appears in the oracle stream."""
+    capacity, n_steps = 16, 20
+    state = seq_init({"x": jnp.zeros((), jnp.int32)}, capacity, window_len, num_envs)
+    for step in range(n_steps):
+        state = seq_add(state, _step_items(step, num_envs), stride=stride)
+    oracle = {tuple(w) for w in _oracle_windows(n_steps, window_len, num_envs, stride)}
+    if not oracle:
+        return
+    out = np.asarray(seq_sample(state, jax.random.key(seed), batch)["x"])
+    assert out.shape == (window_len, batch)
+    for b in range(batch):
+        col = tuple(out[:, b].tolist())
+        assert col in oracle, col
+        # time-contiguous: consecutive rows are consecutive steps
+        assert all(col[j + 1] - col[j] == 1000 for j in range(window_len - 1))
+
+
+# ------------------------------------------- the schedule invariant
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    capacity=st.integers(1, 12),
+    window_len=st.integers(1, 5),
+    num_envs=st.integers(1, 3),
+    stride=st.integers(1, 5),
+    n_steps=st.integers(0, 24),
+    data_seed=st.integers(0, 2**31 - 1),
+)
+def test_fill_is_pure_function_of_step_counter(
+    capacity, window_len, num_envs, stride, n_steps, data_seed
+):
+    """Regression pin: buffer fill never keys on the *data*.
+
+    ``size`` must equal the `seq_expected_size` closed form after every
+    single step — for an arbitrary random data stream — and the whole
+    can-sample trace must be identical across different data streams.
+    This is the invariant that keeps the seed-vmap runner's hoisted
+    update gate (`_one_iteration_seeds`) data-independent; a
+    fill-triggered prioritization scheme would trip it immediately.
+    """
+    def run(key):
+        state = seq_init({"x": jnp.zeros(())}, capacity, window_len, num_envs)
+        sizes, gates = [], []
+        for step in range(n_steps):
+            key, k = jax.random.split(key)
+            items = {"x": jax.random.normal(k, (num_envs,))}
+            state = seq_add(state, items, stride=stride)
+            sizes.append(int(state.size))
+            gates.append(bool(seq_can_sample(state, num_envs)))
+        return sizes, gates
+
+    sizes, gates = run(jax.random.key(data_seed))
+    for step, size in enumerate(sizes):
+        assert size == seq_expected_size(
+            step + 1, capacity, window_len, num_envs, stride
+        ), (step, size)
+    sizes2, gates2 = run(jax.random.key(data_seed + 1))
+    assert sizes == sizes2 and gates == gates2
+
+
+def test_rec_madqn_update_schedule_is_data_independent():
+    """Different seeds (different actions, rewards, carries — different
+    *data*) must run the identical update schedule: train.steps is a pure
+    function of the iteration count."""
+    system = make_rec_madqn(
+        MatrixGame(horizon=6),
+        RecMadqnConfig(hidden_sizes=(8,), seq_len=4, burn_in=2,
+                       buffer_capacity=64, batch_size=4, min_windows=4,
+                       eps_decay_steps=50, target_update_period=5),
+    )
+    steps = []
+    for seed in (0, 1, 2):
+        st_out, _ = train_anakin(system, jax.random.key(seed), 24, num_envs=4)
+        steps.append(int(st_out.train.steps))
+        assert int(st_out.buffer.size) == seq_expected_size(24, 64, 6, 4, 4)
+    assert steps[0] >= 1
+    assert steps[0] == steps[1] == steps[2], steps
+
+
+# --------------------------------------- stored-carry window semantics
+
+
+def test_window_start_carry_reads_stored_row_zero():
+    carry_in = jnp.arange(12.0).reshape(3, 2, 2)  # (T, B, hidden)
+    got = window_start_carry(
+        {"carry_in": carry_in}, lambda bs: jnp.zeros((*bs, 2)), (2,)
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(carry_in[0]))
+
+
+def test_stored_carry_start_diverges_from_zero_start():
+    """The tentpole semantics: on a window whose stored row-0 carry is
+    nonzero (mid-episode cut), training from the stored state produces
+    different activations than the retired zero-start fallback — and the
+    stored path is exactly an unroll from the stored carry."""
+    core = ScannedRNN(in_dim=3, hidden_dim=4)
+    params = core.init(jax.random.key(0))
+    T, B = 5, 2
+    xs = jax.random.normal(jax.random.key(1), (T, B, 3))
+    stored = jax.random.normal(jax.random.key(2), (T, B, 4))  # per-step carry_in
+
+    c_stored = window_start_carry(
+        {"carry_in": stored}, core.initial_carry, (B,)
+    )
+    c_zero = window_start_carry({}, core.initial_carry, (B,))
+    np.testing.assert_array_equal(np.asarray(c_zero), np.zeros((B, 4)))
+
+    _, out_stored = core.unroll(params, c_stored, xs)
+    _, out_zero = core.unroll(params, c_zero, xs)
+    assert np.abs(np.asarray(out_stored) - np.asarray(out_zero)).max() > 1e-4
+    _, ref = core.unroll(params, stored[0], xs)
+    np.testing.assert_array_equal(np.asarray(out_stored), np.asarray(ref))
+
+
+def test_burn_in_carry_warms_exactly_and_stops_gradients():
+    """`burn_in_carry` == the direct prefix unroll numerically, but TD
+    gradients must not flow through it: a loss on the warmed carry has
+    zero gradient wrt params and the window-start carry, while the same
+    loss on the un-stopped unroll does not."""
+    core = ScannedRNN(in_dim=3, hidden_dim=4)
+    params = core.init(jax.random.key(0))
+    Tb, B = 3, 2
+    xs = jax.random.normal(jax.random.key(1), (Tb, B, 3))
+    resets = jnp.zeros((Tb, B), bool)
+    c0 = jax.random.normal(jax.random.key(2), (B, 4))
+    unroll = lambda c, x, r: core.unroll(params, c, x, r)
+
+    warmed = burn_in_carry(unroll, c0, xs, resets)
+    direct, _ = core.unroll(params, c0, xs, resets)
+    np.testing.assert_array_equal(np.asarray(warmed), np.asarray(direct))
+
+    def loss_through_burn_in(params, c0):
+        u = lambda c, x, r: core.unroll(params, c, x, r)
+        return jnp.sum(burn_in_carry(u, c0, xs, resets) ** 2)
+
+    def loss_unstopped(params, c0):
+        carry, _ = core.unroll(params, c0, xs, resets)
+        return jnp.sum(carry ** 2)
+
+    gp, gc = jax.grad(loss_through_burn_in, argnums=(0, 1))(params, c0)
+    for leaf in jax.tree_util.tree_leaves((gp, gc)):
+        np.testing.assert_array_equal(np.asarray(leaf), 0.0)
+    gp_ref, gc_ref = jax.grad(loss_unstopped, argnums=(0, 1))(params, c0)
+    assert max(
+        np.abs(np.asarray(leaf)).max()
+        for leaf in jax.tree_util.tree_leaves((gp_ref, gc_ref))
+    ) > 1e-6  # the stop is what zeroed them, not a degenerate loss
+
+
+def test_burn_in_carry_zero_length_prefix_passes_carry_through():
+    core = ScannedRNN(in_dim=3, hidden_dim=4)
+    params = core.init(jax.random.key(0))
+    c0 = jax.random.normal(jax.random.key(1), (2, 4))
+    xs = jnp.zeros((0, 2, 3))
+    unroll = lambda c, x, r: core.unroll(params, c, x, r)
+    out = burn_in_carry(unroll, c0, xs, jnp.zeros((0, 2), bool))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(c0))
+    g = jax.grad(
+        lambda c: jnp.sum(burn_in_carry(unroll, c, xs, jnp.zeros((0, 2), bool)))
+    )(c0)
+    np.testing.assert_array_equal(np.asarray(g), 0.0)
+
+
+def test_rec_madqn_rejects_bad_window_config():
+    env = MatrixGame(horizon=6)
+    with pytest.raises(ValueError):
+        make_rec_madqn(env, RecMadqnConfig(seq_len=0))
+    with pytest.raises(ValueError):
+        make_rec_madqn(env, RecMadqnConfig(burn_in=-1))
+    with pytest.raises(ValueError):
+        make_rec_madqn(env, RecMadqnConfig(stride=0))
+
+
+# ----------------------------------------------------------- learning
+
+
+@pytest.mark.slow
+def test_rec_madqn_improves_matrix_game():
+    """rec-MADQN learns on the climbing game (reward climbs over updates)."""
+    system = make_rec_madqn(
+        MatrixGame(horizon=10),
+        RecMadqnConfig(hidden_sizes=(32,), learning_rate=1e-3,
+                       seq_len=5, burn_in=2, buffer_capacity=1024,
+                       batch_size=32, min_windows=64,
+                       eps_decay_steps=3000, target_update_period=100),
+    )
+    _, metrics = train_anakin(system, jax.random.key(0), 5000, num_envs=8)
+    r = np.asarray(metrics["reward"]).reshape(100, 50).mean(axis=-1)
+    assert r[-10:].mean() > r[:10].mean() + 1.0, (r[:10].mean(), r[-10:].mean())
